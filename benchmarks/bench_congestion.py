@@ -1,0 +1,26 @@
+"""Fig 7 — route under self-congestion: flat through K<=2 flows, rises at
+full subscription (K=3), and the route-vs-fetch ranking never inverts."""
+
+from repro.core import constants as C
+from repro.core import cost_model as cm
+
+from benchmarks.common import row
+
+
+def run():
+    fab = C.fabric("h100_ibgda")
+    rows = []
+    for mq in (256, 1024):
+        t0 = cm.t_route_congested(fab, mq, 0)
+        for k in (0, 1, 2, 3):
+            t = cm.t_route_congested(fab, mq, k)
+            rows.append(row(f"fig7/route@mq{mq}_K{k}", t * 1e6,
+                            "model:congestion",
+                            vs_K0_pct=round(100 * (t / t0 - 1), 1)))
+    # paper anchors: +119% at (1024, K=3); flat through K=2; never inverts
+    r = cm.t_route_congested(fab, 1024, 3) / cm.t_route_congested(fab, 1024, 0)
+    rows.append(row("fig7/K3_rise@mq1024", None, "model:congestion",
+                    rise_pct=round((r - 1) * 100, 1)))
+    assert abs(r - 2.19) < 0.35
+    assert cm.t_splice(2048) / cm.t_route_congested(fab, 1024, 3) > 10
+    return rows

@@ -1,0 +1,38 @@
+"""Fig 3b — ROUTE vs FETCH on wire bytes over the (M_q, c_t) grid: the
+break-even line M_q* = c_t b_KV/(q+p); decode at a hot 2k chunk sits at
+>= 76% fewer routed bytes. §5.4: the same break-even at the released
+selection budgets (V3.2/GLM-5.1 top-2048, V4 top-1024/512)."""
+
+import numpy as np
+
+from repro.core import constants as C
+from repro.core import cost_model as cm
+
+from benchmarks.common import row
+
+
+def run():
+    rows = []
+    for ct in (512, 1024, 2048, 4096):
+        be = cm.byte_breakeven_mq(ct)
+        rows.append(row(f"fig3b/breakeven_mq@ct{ct}", be,
+                        "model:bytes", tokens=ct))
+    saved = 1 - cm.route_wire_bytes(256) / cm.fetch_wire_bytes(2048)
+    rows.append(row("fig3b/bytes_saved_pct@mq256_ct2048", saved * 100,
+                    "model:bytes"))
+    assert saved >= 0.76
+    # grid summary: fraction of decode-typical cells (M_q <= 256) where
+    # route wins on bytes, over c_t in [256, 4096]
+    mqs = np.array([1, 4, 16, 64, 128, 256])
+    cts = np.array([256, 512, 1024, 2048, 4096])
+    wins = sum(cm.route_wire_bytes(int(m)) < cm.fetch_wire_bytes(int(c))
+               for m in mqs for c in cts)
+    rows.append(row("fig3b/route_wins_decode_cells_pct",
+                    100 * wins / (len(mqs) * len(cts)), "model:bytes"))
+    # selection budgets (§5.4): break-even spans ~270 (top-512) to ~1080
+    for name, k in C.SELECTION_BUDGETS.items():
+        rows.append(row(f"fig3b/breakeven@{name}_top{k}",
+                        cm.byte_breakeven_mq(k), "model:bytes",
+                        above_decode_batch=bool(
+                            cm.byte_breakeven_mq(k) > 256)))
+    return rows

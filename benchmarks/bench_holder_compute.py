@@ -1,0 +1,69 @@
+"""Fig 4b — the route-holder's compute-capacity elbow at N~8: a holder
+serving N routed requesters runs a batched partial; flat while the cache
+read dominates, linear once per-requester compute does.
+
+TPU-native derivation (DESIGN.md §2 — CPU wall-times are meaningless in
+us): from OUR mla_decode kernel's tiling we count exact flops and HBM
+bytes per (N, c_t) and evaluate on the v5e roofline constants. The cache
+read (S x 576 x 2 B, shared by all N requesters) is the flat term; the
+N-proportional MXU work is the linear term — elbow where they cross.
+Also: the sparse-kernel premium tracks the selection budget k, not the
+resident store size (§6.3)."""
+
+import numpy as np
+
+from repro.core import constants as C
+
+from benchmarks.common import row
+
+H, DQ, DV = 16, 576, 512
+CT = 2048
+
+
+def kernel_cost_s(n_req: int, s_tokens: int, h: int = H) -> tuple:
+    """(time, flat_term, linear_term) for the batched decode kernel."""
+    cache_bytes = s_tokens * DQ * 2               # streamed once, shared
+    flops = n_req * h * (2 * s_tokens * DQ + 2 * s_tokens * DV)
+    q_bytes = n_req * h * DQ * 2
+    t_mem = (cache_bytes + q_bytes) / C.TPU_HBM_BW
+    t_compute = flops / C.TPU_PEAK_FLOPS_BF16
+    return max(t_mem, t_compute), t_mem, t_compute
+
+
+def run():
+    rows = []
+    prev = None
+    elbow = None
+    for n in (1, 2, 4, 8, 16, 32, 64, 128, 256):
+        t, t_mem, t_c = kernel_cost_s(n, CT)
+        rows.append(row(f"fig4b/holder_partial@N{n}", t * 1e6,
+                        "derived:kernel-flops-bytes@v5e",
+                        mem_us=round(t_mem * 1e6, 2),
+                        compute_us=round(t_c * 1e6, 2)))
+        if elbow is None and t_c > t_mem:
+            elbow = n
+        prev = t
+    rows.append(row("fig4b/compute_elbow_N", elbow,
+                    "derived:kernel-flops-bytes@v5e"))
+    # the elbow lands at the same order as the paper's N~8 (H100-measured)
+    assert 4 <= elbow <= 32, elbow
+    # saturated holder stays far below the ~3 ms splice (paper: <= 0.4 ms)
+    t256, _, _ = kernel_cost_s(256, CT)
+    rows.append(row("fig4b/saturated@N256_vs_splice", t256 * 1e6,
+                    "derived:kernel-flops-bytes@v5e",
+                    splice_ratio=round(2.9e-3 / t256, 1)))
+
+    # §6.3: sparse holder cost tracks the selection budget, not store size
+    for store in (2048, 32768):
+        t, _, _ = kernel_cost_s(8, 2048)   # k=2048 selected from `store`
+        rows.append(row(f"fig4b/sparse_k2048_store{store}", t * 1e6,
+                        "derived:selection-budget-bound",
+                        store_tokens=store))
+    # dense-vs-sparse premium at matched k (gather lengthening): modeled as
+    # the block-gather's extra index traffic — small, bounded
+    for k, prem in C.SPARSE_PREMIUM.items():
+        t, _, _ = kernel_cost_s(8, k)
+        rows.append(row(f"fig4b/sparse_premium@k{k}", t * prem * 1e6,
+                        "model:paper-premium-x-kernel-cost",
+                        premium=prem))
+    return rows

@@ -1,0 +1,34 @@
+"""Fig 1b — the cost-shape asymmetry: FETCH flat (~3 ms splice) in chunk
+size, LOCAL size-scaling, ROUTE two orders below both; fetch/local
+crossover at ~75-220 tokens."""
+
+from repro.core import constants as C
+from repro.core import cost_model as cm
+from repro.core import predicate as P
+
+from benchmarks.common import row
+
+CHUNKS = [55, 128, 256, 512, 1024, 2048, 4096]
+MQ = 256
+
+
+def run():
+    fab = C.fabric("h100_ibgda")
+    rows = []
+    for ct in CHUNKS:
+        tr = cm.t_route_transport(fab, MQ, include_launch=True)
+        tf = cm.t_fetch(fab, ct)
+        tl = cm.t_local(ct)
+        rows.append(row(f"fig1b/route@ct{ct}", tr * 1e6, "model",
+                        fetch_us=round(tf * 1e6, 1),
+                        local_us=round(tl * 1e6, 1),
+                        route_vs_fetch=round(tf / tr, 1)))
+    lo, hi = P.fetch_local_crossover_ct(fab)
+    rows.append(row("fig1b/fetch_local_crossover_lo_tokens", lo,
+                    "model:c=1.5us/token-layer"))
+    rows.append(row("fig1b/fetch_local_crossover_hi_tokens", hi,
+                    "model:c=0.5us/token-layer"))
+    # route stays >= 1 order below fetch across the whole range
+    assert all(cm.t_fetch(fab, ct) / cm.t_route_transport(fab, MQ,
+               include_launch=True) > 10 for ct in CHUNKS)
+    return rows

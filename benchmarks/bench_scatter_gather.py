@@ -1,0 +1,51 @@
+"""Fig 4a — scatter transport under selection: gathering a 2048-entry
+selected set across M holders grows ~linearly in M (scattering defeats
+bulk coalescing); the route fan-out stays flat at tens of microseconds.
+The M-way merge itself is measured on CPU (it is pure math — flat in M)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import constants as C
+from repro.core import cost_model as cm
+from repro.core.merge import merge_stacked
+
+from benchmarks.common import row, timeit_us
+
+K_SELECTED = 2048
+
+
+def run():
+    fab = C.fabric("h100_ibgda")
+    rows = []
+    for m in range(1, 8):
+        tf = cm.t_fetch_scattered(fab, K_SELECTED, m) / cm.MLA_PAYLOAD.n_layers
+        trt = cm.t_route_fanout(fab, 256, m)
+        rows.append(row(f"fig4a/fetch_gather_per_layer@M{m}", tf * 1e6,
+                        "model:scatter",
+                        route_fanout_us=round(trt * 1e6, 1)))
+    # paper: ~1.3 -> ~3.9 ms/layer for M=1..7 — linear growth ~3x
+    t1 = cm.t_fetch_scattered(fab, K_SELECTED, 1)
+    t7 = cm.t_fetch_scattered(fab, K_SELECTED, 7)
+    rows.append(row("fig4a/gather_growth_M1_to_M7", None, "model:scatter",
+                    ratio=round(t7 / t1, 2)))
+    assert 2.0 < t7 / t1 < 5.0
+
+    # measured (CPU): the M-way online-softmax merge is flat in M
+    B, H, dv = 8, 16, 512
+    key = jax.random.PRNGKey(0)
+    merged_us = {}
+    for m in (1, 2, 4, 8):
+        o = jax.random.normal(key, (m, B, H, dv))
+        mm = jax.random.normal(key, (m, B, H))
+        ll = jnp.abs(jax.random.normal(key, (m, B, H))) + 0.5
+        f = jax.jit(lambda o, mm, ll: merge_stacked(o, mm, ll).o)
+        f(o, mm, ll).block_until_ready()
+        merged_us[m] = timeit_us(
+            lambda: f(o, mm, ll).block_until_ready())
+        rows.append(row(f"fig4a/merge_measured@M{m}", merged_us[m],
+                        "measured:cpu-jit"))
+    rows.append(row("fig4a/merge_M8_over_M1", None, "measured:cpu-jit",
+                    ratio=round(merged_us[8] / merged_us[1], 2)))
+    return rows

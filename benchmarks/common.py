@@ -1,0 +1,47 @@
+"""Benchmark harness helpers.
+
+Each bench module exposes run() -> list of row dicts with keys:
+  name          — metric id (stable, CSV-friendly)
+  us_per_call   — microseconds (model-derived or measured; see source)
+  derived       — provenance/notes ("model:<constants>" vs "measured:cpu")
+plus free-form extras. run.py aggregates to CSV.
+
+This container is CPU-only: kernel-level wall-times are not meaningful in
+absolute terms, so benches report (a) the closed-form cost model evaluated
+at the paper's measured constants (validated against the paper's headline
+numbers by tests/test_cost_model.py), and (b) structural measurements from
+our own compiled artifacts (HLO collective bytes, kernel flop/byte counts),
+which ARE meaningful on this box. Provenance is always in `derived`.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import numpy as np
+
+
+def timeit_us(fn: Callable, iters: int = 20, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def row(name: str, us, derived: str, **extra) -> dict:
+    r = {"name": name, "us_per_call": (None if us is None
+                                       else round(float(us), 3)),
+         "derived": derived}
+    r.update(extra)
+    return r
+
+
+def emit_csv(rows: List[dict]) -> str:
+    lines = ["name,us_per_call,derived"]
+    for r in rows:
+        us = "" if r.get("us_per_call") is None else r["us_per_call"]
+        lines.append(f"{r['name']},{us},{r['derived']}")
+    return "\n".join(lines)

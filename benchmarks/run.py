@@ -1,0 +1,73 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only <substr>]
+
+Prints ``name,us_per_call,derived`` CSV (with per-row extras as a trailing
+JSON column) and writes benchmarks/results/benchmarks.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import pathlib
+import time
+import traceback
+
+BENCHES = [
+    "bench_payload_sweep",       # Table 1
+    "bench_fabric_fit",          # Table 2
+    "bench_primitive_costs",     # Fig 1b
+    "bench_crossover_map",       # Fig 3b
+    "bench_scatter_gather",      # Fig 4a
+    "bench_holder_compute",      # Fig 4b
+    "bench_staging_elbow",       # Fig 5b
+    "bench_fabric_robustness",   # Fig 6
+    "bench_congestion",          # Fig 7
+    "bench_host_overhead",       # §5.3
+    "bench_wire_bytes_hlo",      # §2.1/§5.2 measured from compiled HLO
+    "bench_route_schedules",     # beyond-paper: pairwise/fanout/ring bytes
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    all_rows = []
+    failures = []
+    print("name,us_per_call,derived")
+    for name in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            rows = mod.run()
+        except Exception as e:                           # noqa: BLE001
+            failures.append((name, traceback.format_exc()))
+            print(f"{name}/ERROR,,{e!r}")
+            continue
+        for r in rows:
+            us = "" if r.get("us_per_call") is None else r["us_per_call"]
+            extras = {k: v for k, v in r.items()
+                      if k not in ("name", "us_per_call", "derived")}
+            suffix = (" " + json.dumps(extras, default=str)) if extras else ""
+            print(f"{r['name']},{us},{r['derived']}{suffix}")
+        all_rows.extend(rows)
+        print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s",
+              flush=True)
+
+    out = pathlib.Path(__file__).parent / "results" / "benchmarks.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(all_rows, indent=1, default=str))
+    if failures:
+        for n, tb in failures:
+            print(f"\n=== {n} FAILED ===\n{tb}", flush=True)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

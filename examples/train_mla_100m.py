@@ -1,0 +1,111 @@
+"""End-to-end training driver: a ~100M-param MLA+MoE transformer (the
+paper's architecture family) trained for a few hundred steps on CPU with
+the full production stack: deterministic pipeline, grad-accumulation train
+step, AdamW, async checkpointing, fault-tolerant loop (one induced failure
+mid-run proves restore+replay).
+
+    PYTHONPATH=src python examples/train_mla_100m.py [--steps 200]
+"""
+
+import argparse
+import pathlib
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import SyntheticPipeline
+from repro.models import model as MD
+from repro.models.mla import MLAConfig
+from repro.models.moe import MoEConfig
+from repro.models.module import count_params, split
+from repro.optim.adamw import AdamWConfig, adamw_init, cosine_schedule
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.step import TrainConfig, make_train_step
+
+
+def build_config(full: bool) -> MD.ModelConfig:
+    """full=True: ~100M params (deepseek-v2-lite family scaled down) — the
+    task-spec driver, a few hundred steps (budget ~1 CPU-hour on this box).
+    Default: a ~20M variant that finishes in minutes on one CPU core; the
+    architecture and stack are identical."""
+    if full:
+        return MD.ModelConfig(
+            name="mla-100m", family="moe", n_layers=8, d_model=512,
+            vocab=32768, attn_type="mla", n_heads=8, n_kv_heads=8,
+            mla=MLAConfig(d_model=512, n_heads=8, kv_lora_rank=128,
+                          q_lora_rank=None, qk_nope_head_dim=64,
+                          qk_rope_head_dim=32, v_head_dim=64),
+            d_ff=2048, first_k_dense=1,
+            moe=MoEConfig(d_model=512, d_expert=512, n_experts=8, top_k=2,
+                          n_shared=1),
+            loss_chunk=256,
+        )
+    return MD.ModelConfig(
+        name="mla-20m", family="moe", n_layers=4, d_model=256,
+        vocab=8192, attn_type="mla", n_heads=4, n_kv_heads=4,
+        mla=MLAConfig(d_model=256, n_heads=4, kv_lora_rank=64,
+                      q_lora_rank=None, qk_nope_head_dim=32,
+                      qk_rope_head_dim=16, v_head_dim=32),
+        d_ff=1024, first_k_dense=1,
+        moe=MoEConfig(d_model=256, d_expert=256, n_experts=8, top_k=2,
+                      n_shared=1),
+        loss_chunk=128,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--full", action="store_true",
+                    help="the ~100M config (budget ~1 CPU-hour)")
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    cfg = build_config(args.full)
+    params, _ = split(MD.init_model(cfg, jax.random.PRNGKey(0)))
+    print(f"model: {cfg.name}, {count_params(params)/1e6:.1f}M params")
+
+    ocfg = AdamWConfig(lr=1e-3)
+    opt_state = adamw_init(params, ocfg)
+    lr_fn = cosine_schedule(1e-3, warmup=20, total=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, ocfg, TrainConfig(n_micro=2),
+                                      lr_fn))
+    pipe = SyntheticPipeline.for_model(cfg, seq_len=args.seq,
+                                       global_batch=args.batch)
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="mla100m_")
+    ckpt = CheckpointManager(ckpt_dir)
+
+    fired = {"done": False}
+
+    def induced_fault(step):
+        if step == args.steps // 2 and not fired["done"]:
+            fired["done"] = True
+            raise RuntimeError("induced mid-run node failure")
+
+    t0 = time.time()
+    params, opt_state, log = train_loop(
+        step_fn, params, opt_state, pipe, ckpt,
+        LoopConfig(total_steps=args.steps, ckpt_every=25, log_every=10),
+        fault_hook=induced_fault)
+    dt = time.time() - t0
+
+    losses = [(e["step"], e["loss"]) for e in log if "loss" in e]
+    events = [e for e in log if e.get("event")]
+    print(f"\ntrained {args.steps} steps in {dt:.1f}s "
+          f"({args.steps/dt:.2f} steps/s on CPU)")
+    print(f"loss: {losses[0][1]:.3f} -> {losses[-1][1]:.3f} "
+          f"(first -> last)")
+    print(f"fault events: {events}")
+    assert losses[-1][1] < losses[0][1], "loss must decrease"
+    assert any(e.get("event") == "restored" for e in log), \
+        "the induced failure must have triggered a restore"
+    print(f"checkpoints at {ckpt_dir}: steps {ckpt.all_steps()}")
+
+
+if __name__ == "__main__":
+    main()

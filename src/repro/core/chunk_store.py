@@ -1,0 +1,133 @@
+"""Partitioned canonical c^KV store (§1): provider-curated canonical chunks,
+discoverable by canonical id across instances, forked copy-on-write by
+concurrent sub-agents.
+
+This is host-side control plane (replicated metadata); the cache bytes live
+device-side, sharded over the instance axis. The serving engine consults the
+store for residency, then the predicate for transport.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class Chunk:
+    chunk_id: str
+    holder: int                 # instance index owning the canonical copy
+    offset: int                 # offset in the holder's pool
+    length: int                 # tokens
+    position_base: int          # canonical position of token 0
+    refcount: int = 0           # concurrent readers (agent fan-in, §6.3)
+    replicas: List[int] = dataclasses.field(default_factory=list)
+    immutable: bool = True
+
+
+@dataclasses.dataclass
+class Fork:
+    """A sub-agent's copy-on-write view: shared immutable prefix + private
+    suffix (the agentic workload of §1)."""
+    fork_id: str
+    base_chunk: str
+    suffix_holder: int
+    suffix_offset: int
+    suffix_length: int = 0
+
+
+class ChunkStore:
+    """Canonical-id -> residency map. Replicated on every host (control
+    plane); mutations are tiny and idempotent, so replication is by
+    broadcast of the op log in a real deployment (single-process here)."""
+
+    def __init__(self, n_instances: int, pool_tokens: int):
+        self.n_instances = n_instances
+        self.pool_tokens = pool_tokens
+        self._chunks: Dict[str, Chunk] = {}
+        self._forks: Dict[str, Fork] = {}
+        self._alloc = [0] * n_instances          # bump allocator per instance
+        self._fork_ids = itertools.count()
+
+    # -- allocation ---------------------------------------------------------
+
+    def allocate(self, instance: int, length: int) -> int:
+        off = self._alloc[instance]
+        if off + length > self.pool_tokens:
+            raise MemoryError(
+                f"instance {instance} pool exhausted "
+                f"({off}+{length} > {self.pool_tokens})")
+        self._alloc[instance] = off + length
+        return off
+
+    def register(self, chunk_id: str, holder: int, length: int,
+                 position_base: int = 0) -> Chunk:
+        if chunk_id in self._chunks:
+            raise KeyError(f"chunk {chunk_id} already registered")
+        off = self.allocate(holder, length)
+        c = Chunk(chunk_id, holder, off, length, position_base)
+        self._chunks[chunk_id] = c
+        return c
+
+    # -- discovery (cross-instance, by canonical id — §1: reuse that a local
+    #    prefix tree cannot capture) --------------------------------------
+
+    def lookup(self, chunk_id: str) -> Chunk:
+        return self._chunks[chunk_id]
+
+    def holders_of(self, chunk_id: str) -> List[int]:
+        c = self._chunks[chunk_id]
+        return [c.holder] + list(c.replicas)
+
+    def resident_on(self, chunk_id: str, instance: int) -> bool:
+        return instance in self.holders_of(chunk_id)
+
+    # -- replication (the amortised FETCH beyond the N~8 elbow, §6.3) -------
+
+    def add_replica(self, chunk_id: str, instance: int) -> Chunk:
+        c = self._chunks[chunk_id]
+        if instance not in c.replicas and instance != c.holder:
+            self.allocate(instance, c.length)
+            c.replicas.append(instance)
+        return c
+
+    def drop_holder(self, instance: int) -> List[str]:
+        """Fault handling: instance died. Chunks whose only copy lived there
+        must be re-prefilled (LOCAL) or restored from checkpoint; chunks with
+        replicas promote one. Returns orphaned ids."""
+        orphaned = []
+        for c in self._chunks.values():
+            if c.holder == instance:
+                if c.replicas:
+                    c.holder = c.replicas.pop(0)
+                else:
+                    orphaned.append(c.chunk_id)
+        for f in self._forks.values():
+            if f.suffix_holder == instance:
+                orphaned.append(f.fork_id)
+        return orphaned
+
+    # -- agentic CoW forks (§1, §6.3) ---------------------------------------
+
+    def fork(self, chunk_id: str, agent_instance: int) -> Fork:
+        c = self._chunks[chunk_id]
+        c.refcount += 1
+        f = Fork(f"fork{next(self._fork_ids)}", chunk_id, agent_instance,
+                 self._alloc[agent_instance])
+        self._forks[f.fork_id] = f
+        return f
+
+    def append_suffix(self, fork_id: str, n_tokens: int) -> Fork:
+        f = self._forks[fork_id]
+        self.allocate(f.suffix_holder, n_tokens)
+        f.suffix_length += n_tokens
+        return f
+
+    def release(self, fork_id: str):
+        f = self._forks.pop(fork_id)
+        self._chunks[f.base_chunk].refcount -= 1
+
+    def fan_in(self, chunk_id: str) -> int:
+        """Concurrent readers of a chunk — the N of the §6.3 elbow."""
+        return self._chunks[chunk_id].refcount

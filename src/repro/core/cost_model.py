@@ -1,0 +1,212 @@
+"""The topology-aware redistribution cost model (paper §4).
+
+    T_redist(F, s, B) = T_probe(F) + T_transfer(F, s, B) + T_compute
+                        + T_return(F, s, B') + T_merge
+
+Instantiated per primitive:
+
+    ROUTE : T_probe + M_q (q+p)/BW + T_compute + T_merge
+    FETCH : T_pull + T_splice          (contiguous reuse)
+            multi-holder scattered gather (selection regime, §5.4)
+    LOCAL : c_t * L * c                (re-prefill)
+
+All functions are pure closed-form (numpy-scalar) — the paper's point is that
+a scheduler evaluates this *arithmetically*, with no online calibration
+(§4.3: "evaluated, not profiled").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import constants as C
+from repro.core.constants import Fabric
+
+
+@dataclasses.dataclass(frozen=True)
+class Payload:
+    """Wire payload geometry for one routed query row (model-dependent).
+
+    Extending the predicate to a new architecture requires exactly the two
+    coefficients the paper names (abstract): the routed payload here and
+    FETCH's move-the-cache cost (b_kv/splice below).
+    """
+    q_bytes: int = C.Q_ROW_BYTES          # routed query row
+    p_bytes: int = C.P_ROW_BYTES          # returned partial (o, m, l)
+    b_kv_token_layer: int = C.B_KV_TOKEN_LAYER
+    n_layers: int = C.V2_LITE_LAYERS
+
+    @property
+    def qp_bytes(self) -> int:
+        return self.q_bytes + self.p_bytes
+
+    @property
+    def b_kv_token_all_layers(self) -> int:
+        return self.b_kv_token_layer * self.n_layers
+
+
+MLA_PAYLOAD = Payload()
+
+
+def payload_for(d_qk: int, d_v: int, n_layers: int,
+                kv_bytes_token_layer: Optional[int] = None) -> Payload:
+    """Instantiate the wire payload from published model dimensions (§1)."""
+    q = d_qk * C.BF16
+    p = d_v * C.BF16 + 2 * C.FP32
+    b_kv = kv_bytes_token_layer if kv_bytes_token_layer is not None else d_qk * C.BF16
+    return Payload(q, p, b_kv, n_layers)
+
+
+# ---------------------------------------------------------------------------
+# ROUTE
+# ---------------------------------------------------------------------------
+
+def t_route_transport(fabric: Fabric, m_q: int, payload: Payload = MLA_PAYLOAD,
+                      include_launch: bool = False) -> float:
+    """Transport round trip: T_probe + M_q (q+p) / BW   [paper eq. §4.2].
+
+    include_launch adds the fixed ~9 us kernel-turnaround residual the linear
+    term omits (§4.3) — used when predicting small-M_q measurements.
+    """
+    t = fabric.t_probe_s + m_q * payload.qp_bytes / fabric.bw_Bps
+    if include_launch:
+        t += fabric.t_launch_s
+    return t
+
+
+def t_route(fabric: Fabric, m_q: int, payload: Payload = MLA_PAYLOAD,
+            t_compute: float = np.mean(C.HOLDER_COMPUTE_DECODE_S),
+            t_merge: float = C.MERGE_COST_S,
+            t_host: float = 0.0,
+            include_launch: bool = False) -> float:
+    """Full ROUTE cost. t_host models the §5.3 prototype host overhead
+    (3.5 ms + 12.5 us * M_q there); 0 for an in-graph transport."""
+    return (t_route_transport(fabric, m_q, payload, include_launch)
+            + t_compute + t_merge + t_host)
+
+
+def t_route_fanout(fabric: Fabric, m_q: int, n_holders: int,
+                   payload: Payload = MLA_PAYLOAD,
+                   t_compute: float = np.mean(C.HOLDER_COMPUTE_DECODE_S),
+                   t_merge_per_way: float = C.MERGE_COST_S / 8) -> float:
+    """Scattered-selection fan-out (§5.4): the query ships once per holder
+    (probe-bound), holders compute in parallel, M-way merge at requester.
+    Stays flat in n_holders: the M sends are concurrent (probe-bound) and the
+    merge is <= 25 us total."""
+    sends = fabric.t_probe_s + m_q * payload.qp_bytes / fabric.bw_Bps
+    return sends + t_compute + n_holders * t_merge_per_way
+
+
+# ---------------------------------------------------------------------------
+# FETCH
+# ---------------------------------------------------------------------------
+
+def t_splice(c_t: int) -> float:
+    """Position-adaptation splice: flat ~3 ms, launch-bound (§2.2, §7)."""
+    return C.SPLICE_BASE_S + C.SPLICE_PER_TOKEN_S * c_t
+
+
+def t_pull(fabric: Fabric, c_t: int, payload: Payload = MLA_PAYLOAD) -> float:
+    """Bulk all-layer c^KV pull, coalesced into one transfer => sees the link
+    peak, not the dispatch ceiling (§8)."""
+    return c_t * payload.b_kv_token_all_layers / fabric.link_peak_Bps
+
+
+def t_fetch(fabric: Fabric, c_t: int, payload: Payload = MLA_PAYLOAD,
+            contiguous: bool = True) -> float:
+    """Move-the-cache. Contiguous reuse pays pull + splice; a true-prefix
+    re-home (delta = 0) elides the splice (§6.3)."""
+    t = t_pull(fabric, c_t, payload)
+    if contiguous:
+        t += t_splice(c_t)
+    return t
+
+
+def t_fetch_scattered(fabric: Fabric, k_selected: int, n_holders: int,
+                      payload: Payload = MLA_PAYLOAD,
+                      per_holder_handshake_s: float = 180e-6) -> float:
+    """Scattered gather under selection (§5.4): per-holder separate transfers
+    (scattering defeats bulk coalescing) + per-holder handshakes; no splice
+    (entries stay at canonical positions). Grows linearly in n_holders;
+    measured 1.3 -> 3.9 ms/layer for M=1->7 at k=2048. Returns the ALL-layer
+    cost. The handshake constant is fit from Fig 4a.
+    """
+    per_layer_bytes = k_selected * payload.b_kv_token_layer
+    # Serial per-holder pulls at the dispatch rate (prototype is host-copy
+    # bound; we take the fabric dispatch rate as the optimistic bound).
+    per_layer = (n_holders * per_holder_handshake_s
+                 + per_layer_bytes / fabric.bw_Bps)
+    return payload.n_layers * per_layer
+
+
+# ---------------------------------------------------------------------------
+# LOCAL
+# ---------------------------------------------------------------------------
+
+def t_local(c_t: int, n_layers: int = C.V2_LITE_LAYERS,
+            c_per_token_layer: float = C.PREFILL_PER_TOKEN_LAYER_MID_S) -> float:
+    """Fresh re-prefill of the chunk: c_t * L * c (§5.1)."""
+    return c_t * n_layers * c_per_token_layer
+
+
+# ---------------------------------------------------------------------------
+# Wire bytes (§5.2) — the M_q x c_t crossover is on bytes alone.
+# ---------------------------------------------------------------------------
+
+def route_wire_bytes(m_q: int, payload: Payload = MLA_PAYLOAD) -> int:
+    return m_q * payload.qp_bytes
+
+
+def fetch_wire_bytes(c_t: int, payload: Payload = MLA_PAYLOAD,
+                     all_layers: bool = False) -> int:
+    b = payload.b_kv_token_all_layers if all_layers else payload.b_kv_token_layer
+    return c_t * b
+
+
+def byte_breakeven_mq(c_t: int, payload: Payload = MLA_PAYLOAD) -> float:
+    """M_q* = c_t * b_KV / (q+p): ROUTE moves fewer bytes below this (§5.2).
+    Per-layer on both sides (the L factor cancels)."""
+    return c_t * payload.b_kv_token_layer / payload.qp_bytes
+
+
+# ---------------------------------------------------------------------------
+# Congestion (§8): flat until a link is fully subscribed.
+# ---------------------------------------------------------------------------
+
+def t_route_congested(fabric: Fabric, m_q: int, k_flows: int,
+                      payload: Payload = MLA_PAYLOAD) -> float:
+    """K concurrent route flows sharing one link. Measured behaviour: flat
+    through K<=2; at K=3 queueing lands on probe and transfer alike."""
+    probe_mult = C.CONGESTION_PROBE_MULT.get(min(k_flows, 3), 1.0)
+    if k_flows >= 3:
+        # Full subscription: each flow sees ~1/k of the dispatch bandwidth
+        # plus probe queueing. Calibrated to the measured +119% at M_q=1024.
+        bw = fabric.bw_Bps / (k_flows - 1)
+    else:
+        bw = fabric.bw_Bps
+    return fabric.t_probe_s * probe_mult + m_q * payload.qp_bytes / bw
+
+
+# ---------------------------------------------------------------------------
+# Model-fit diagnostics (§4.3): MAPE of the affine model vs measurements.
+# ---------------------------------------------------------------------------
+
+def mape(predicted: Sequence[float], measured: Sequence[float]) -> float:
+    p = np.asarray(predicted, dtype=np.float64)
+    m = np.asarray(measured, dtype=np.float64)
+    return float(np.mean(np.abs(p - m) / m))
+
+
+def fit_affine(m_qs: Sequence[int], rts: Sequence[float],
+               payload: Payload = MLA_PAYLOAD) -> Fabric:
+    """Least-squares re-fit of the two per-fabric constants (T_probe, BW)
+    from a measured (M_q, round-trip) sweep — 'extending to a new fabric
+    requires measuring just two coefficients'."""
+    x = np.asarray(m_qs, dtype=np.float64) * payload.qp_bytes
+    y = np.asarray(rts, dtype=np.float64)
+    slope, intercept = np.polyfit(x, y, 1)
+    bw = 1.0 / slope
+    return Fabric("fitted", float(intercept), float(bw), float(bw))

@@ -1,0 +1,105 @@
+"""Online-softmax partial-attention merge (paper §3.2, §3.3).
+
+A *partial* is the triple (o, m, l):
+    o : the holder's normalized attention output over its resident subset,
+        shape (..., d_v)
+    m : running max-logit, shape (...)
+    l : softmax denominator sum(exp(logit - m)), shape (...)
+
+This is the sufficient statistic FlashAttention carries between tiles, here
+carried between instances. The merge is exact (associative + commutative up to
+float round-off) and has a zero-weight identity (l = 0, m = -inf), which is
+what makes multi-holder fan-out partition-invariant (§3.3).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+NEG_INF = float("-inf")
+
+
+class Partial(NamedTuple):
+    o: jax.Array      # (..., d_v) normalized partial output
+    m: jax.Array      # (...,) running max logit
+    l: jax.Array      # (...,) softmax denominator at m
+
+    @staticmethod
+    def identity(shape: tuple, d_v: int, dtype=jnp.float32) -> "Partial":
+        """The zero-weight identity: merging it is a no-op."""
+        return Partial(
+            o=jnp.zeros(shape + (d_v,), dtype),
+            m=jnp.full(shape, NEG_INF, dtype),
+            l=jnp.zeros(shape, dtype),
+        )
+
+
+def merge2(a: Partial, b: Partial) -> Partial:
+    """Merge two partials exactly.
+
+    Guards: if both are identity (m = -inf), the result is identity without
+    producing NaNs from (-inf) - (-inf).
+    """
+    m = jnp.maximum(a.m, b.m)
+    # exp(-inf - -inf) would be NaN; pin the reference point to 0 when both
+    # inputs are identity so exp(a.m - 0) = exp(-inf) = 0 falls out cleanly.
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    wa = a.l * jnp.exp(a.m - m_safe)
+    wb = b.l * jnp.exp(b.m - m_safe)
+    l = wa + wb
+    denom = jnp.where(l > 0, l, 1.0)
+    o = (wa[..., None] * a.o + wb[..., None] * b.o) / denom[..., None]
+    return Partial(o=o, m=jnp.where(l > 0, m, NEG_INF), l=l)
+
+
+def merge_tree(partials: Sequence[Partial]) -> Partial:
+    """M-way merge as a balanced tree (associativity makes any shape exact to
+    round-off; the tree minimizes depth for the ring/fan-in variants)."""
+    ps = list(partials)
+    if not ps:
+        raise ValueError("merge_tree needs at least one partial")
+    while len(ps) > 1:
+        nxt = [merge2(ps[i], ps[i + 1]) for i in range(0, len(ps) - 1, 2)]
+        if len(ps) % 2:
+            nxt.append(ps[-1])
+        ps = nxt
+    return ps[0]
+
+
+def merge_stacked(o: jax.Array, m: jax.Array, l: jax.Array) -> Partial:
+    """Merge M stacked partials: o (M, ..., d_v), m/l (M, ...).
+
+    Single-pass fused form (what the softmax_merge Pallas kernel computes):
+        m* = max_i m_i ;  w_i = l_i exp(m_i - m*) ;
+        o* = sum_i w_i o_i / sum_i w_i
+    """
+    m_star = jnp.max(m, axis=0)
+    safe_m = jnp.where(jnp.isfinite(m_star), m_star, 0.0)
+    w = l * jnp.exp(m - safe_m[None])          # exp(-inf) = 0 covers identity
+    l_star = jnp.sum(w, axis=0)
+    denom = jnp.where(l_star > 0, l_star, 1.0)
+    o_star = jnp.einsum("i...,i...d->...d", w / denom[None], o)
+    return Partial(o=o_star, m=jnp.where(l_star > 0, m_star, NEG_INF), l=l_star)
+
+
+def partial_from_logits(logits: jax.Array, values: jax.Array,
+                        mask: jax.Array | None = None) -> Partial:
+    """Reference construction of a partial from raw attention logits over a
+    resident subset: logits (..., S), values (..., S, d_v)."""
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)
+    safe_m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(logits - safe_m[..., None])
+    p = jnp.where(jnp.isfinite(logits), p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    denom = jnp.where(l > 0, l, 1.0)
+    # values may be bf16 (the resident cache): mixed-precision dot with f32
+    # accumulate, no materialized f32 copy of the cache (§Perf P2)
+    o = jnp.einsum("...s,...sd->...d", p / denom[..., None], values,
+                   preferred_element_type=jnp.float32)
+    return Partial(o=o, m=m, l=l)

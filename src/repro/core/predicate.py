@@ -1,0 +1,151 @@
+"""The closed-form ROUTE / FETCH / LOCAL primitive-selection predicate (§5).
+
+Per (chunk, request), evaluate the three costs of cost_model.py and take the
+argmin — in microseconds of scheduler time, with no online profiling. The
+serving engine (repro.serving) calls decide() per scheduled chunk access.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import numpy as np
+
+from repro.core import constants as C
+from repro.core import cost_model as cm
+from repro.core.constants import Fabric
+
+
+class Primitive(enum.Enum):
+    ROUTE = "route"
+    FETCH = "fetch"
+    LOCAL = "local"
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """What the scheduler already tracks per (chunk, request) (§5.5)."""
+    m_q: int                       # routed-query batch size
+    c_t: int                       # chunk size in tokens
+    fabric: Fabric                 # requester->holder fabric
+    payload: cm.Payload = cm.MLA_PAYLOAD
+    # Amortization: expected number of subsequent local decode steps on this
+    # instance that would reuse a fetched copy (FETCH "only to amortise").
+    expected_reuse_steps: int = 1
+    # Selection regime (§5.4): if set, the chunk is a scattered top-k set
+    # spread over n_holders; FETCH becomes a gather, splice is inadmissible.
+    k_selected: Optional[int] = None
+    n_holders: int = 1
+    # True-prefix case (§6.3): chunk served at its cached offset => delta
+    # rotation is the identity and the splice elides.
+    position_delta: int = 1
+    # Whether a route to the holder exists at all (disaggregated-prefill
+    # corner: a model-agnostic byte store cannot run the partial, §6.3).
+    holder_can_compute: bool = True
+    # Host-overhead regime (§5.3): 0 for in-graph transport (TPU), or the
+    # prototype's 3.5ms + 12.5us/row for validation against the paper.
+    host_overhead: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    primitive: Primitive
+    t_route: float
+    t_fetch: float
+    t_local: float
+    reason: str
+
+    @property
+    def costs(self):
+        return {Primitive.ROUTE: self.t_route, Primitive.FETCH: self.t_fetch,
+                Primitive.LOCAL: self.t_local}
+
+
+def route_cost(req: Request) -> float:
+    t_host = (C.HOST_OVERHEAD_BASE_S + C.HOST_OVERHEAD_PER_ROW_S * req.m_q
+              if req.host_overhead else 0.0)
+    if not req.holder_can_compute:
+        return float("inf")
+    if req.k_selected is not None and req.n_holders > 1:
+        t = cm.t_route_fanout(req.fabric, req.m_q, req.n_holders, req.payload)
+    else:
+        t = cm.t_route(req.fabric, req.m_q, req.payload)
+    return t + t_host
+
+
+def fetch_cost(req: Request) -> float:
+    if req.k_selected is not None:
+        # Scattered gather; no splice (entries at canonical positions). A
+        # fetched selection cannot amortise: it is re-chosen every step (§5.4).
+        return cm.t_fetch_scattered(req.fabric, req.k_selected, req.n_holders,
+                                    req.payload)
+    contiguous = req.position_delta != 0
+    t = cm.t_fetch(req.fabric, req.c_t, req.payload, contiguous=contiguous)
+    # Amortise the one-time pull+splice over expected local reuse steps.
+    return t / max(1, req.expected_reuse_steps)
+
+
+def local_cost(req: Request,
+               c_per_token_layer: float = C.PREFILL_PER_TOKEN_LAYER_MID_S) -> float:
+    return cm.t_local(req.c_t, req.payload.n_layers, c_per_token_layer)
+
+
+def decide(req: Request) -> Decision:
+    """The closed-form predicate: argmin of the three instantiated costs."""
+    tr, tf, tl = route_cost(req), fetch_cost(req), local_cost(req)
+    best = min((tr, Primitive.ROUTE), (tf, Primitive.FETCH), (tl, Primitive.LOCAL),
+               key=lambda x: x[0])[1]
+    reason = _explain(req, tr, tf, tl, best)
+    return Decision(best, tr, tf, tl, reason)
+
+
+def _explain(req: Request, tr: float, tf: float, tl: float,
+             best: Primitive) -> str:
+    if best is Primitive.ROUTE:
+        if req.k_selected is not None:
+            return ("selection regime: route is the indexer's choice made "
+                    "distributed; scattered gather would grow with holders")
+        return (f"decode-shaped (M_q={req.m_q}): route RT "
+                f"{tr*1e6:.0f}us vs fetch {tf*1e6:.0f}us / local {tl*1e6:.0f}us")
+    if best is Primitive.FETCH:
+        if req.expected_reuse_steps > 1:
+            return (f"amortised over {req.expected_reuse_steps} local steps; "
+                    "fetch pays the splice once")
+        if req.m_q > req.c_t:
+            return "query batch exceeds chunk: routing would ship more than the chunk"
+        return "no cheaper primitive available"
+    return f"small chunk (c_t={req.c_t}): re-prefill undercuts the flat splice"
+
+
+# ---------------------------------------------------------------------------
+# Serving rules of thumb (§5.5) as queryable helpers.
+# ---------------------------------------------------------------------------
+
+def fetch_local_crossover_ct(fabric: Fabric,
+                             payload: cm.Payload = cm.MLA_PAYLOAD,
+                             c_lo: float = C.PREFILL_PER_TOKEN_LAYER_S[0],
+                             c_hi: float = C.PREFILL_PER_TOKEN_LAYER_S[1]) -> tuple:
+    """Chunk size above which FETCH's flat splice undercuts LOCAL re-prefill.
+    Paper: ~75-220 tokens for c in [0.5, 1.5] us/token-layer."""
+    out = []
+    for c in (c_hi, c_lo):      # c_hi gives the small end of the band
+        # Solve c_t * L * c = t_fetch(c_t); pull term is tiny, iterate once.
+        ct = np.array(1.0)
+        for _ in range(50):
+            ct = cm.t_fetch(fabric, float(ct), payload) / (payload.n_layers * c)
+        out.append(float(ct))
+    return tuple(out)
+
+
+def holder_fanout_cap() -> int:
+    """Per-holder concurrent-requester cap: both the copy- and compute-elbows
+    sit near 8 (§6.2, §6.3)."""
+    return C.HOLDER_COMPUTE_ELBOW_N
+
+
+def replication_threshold(n_agents: int) -> bool:
+    """Agentic fan-in (§6.3): beyond the elbow, added agents cost linearly and
+    a second replica (an amortised FETCH) is warranted."""
+    return n_agents > C.HOLDER_COMPUTE_ELBOW_N

@@ -1,0 +1,104 @@
+"""Sparse selection — the indexer regime (§5.4): DSA/NSA-style top-k.
+
+A lightweight indexer scores every cached entry per query and keeps the
+top-k. On TPU we select at *block* granularity (64-token blocks, NSA-style):
+MXU/VMEM want block gathers, not row gathers — this is the DESIGN.md §6
+hardware adaptation of the token-level Lightning Indexer. Both granularities
+are provided; the block form is what kernels/sparse_select consumes.
+
+ROUTE under selection is "the indexer's choice made distributed" (§5.4): the
+selected set is scattered across holders; each holder attends its resident
+subset of the selection in place (mask = selected & resident) and the
+partials merge — no gather, no re-rotation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import constants as C
+from repro.models.module import KeyGen, param
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexerConfig:
+    d_model: int = 2048
+    d_index: int = 64          # lightweight score-projection width
+    k_tokens: int = 2048       # selection budget (V3.2/GLM-5.1 default)
+    block_tokens: int = C.NSA_BLOCK_TOKENS   # 64
+
+
+def init_indexer(kg: KeyGen, cfg: IndexerConfig, dtype=jnp.bfloat16):
+    return {
+        "q_proj": param(kg(), (cfg.d_model, cfg.d_index), ("embed", None), dtype),
+        "k_proj": param(kg(), (cfg.d_model, cfg.d_index), ("embed", None), dtype),
+    }
+
+
+def index_scores(p, x_q: jax.Array, keys_idx: jax.Array) -> jax.Array:
+    """x_q (..., D) query hidden state; keys_idx (S, d_index) precomputed
+    index keys for the cache. Returns (..., S) relevance scores."""
+    q = x_q @ p["q_proj"]
+    return jnp.einsum("...d,sd->...s", q.astype(jnp.float32),
+                      keys_idx.astype(jnp.float32))
+
+
+def index_keys(p, x_ctx: jax.Array) -> jax.Array:
+    """Precompute per-token index keys at prefill (cached alongside c^KV)."""
+    return x_ctx @ p["k_proj"]
+
+
+def topk_tokens(scores: jax.Array, k: int) -> jax.Array:
+    """(.., S) -> (.., k) selected token indices (DSA index_topk)."""
+    _, idx = jax.lax.top_k(scores, k)
+    return idx
+
+
+def topk_blocks(scores: jax.Array, block_tokens: int, k_blocks: int):
+    """Block-granular selection (NSA / TPU-native): aggregate token scores per
+    64-token block, keep the top-k_blocks blocks. Returns (block_idx (..,
+    k_blocks), token mask construction helper)."""
+    s = scores.shape[-1]
+    n_blocks = s // block_tokens
+    blocked = scores[..., : n_blocks * block_tokens].reshape(
+        scores.shape[:-1] + (n_blocks, block_tokens))
+    block_scores = jnp.max(blocked, axis=-1)
+    _, idx = jax.lax.top_k(block_scores, k_blocks)
+    return idx
+
+
+def selection_mask(idx_tokens: jax.Array, seq_len: int) -> jax.Array:
+    """(.., k) indices -> (.., S) boolean mask (for masked partial attention:
+    the holder attends selected & resident in place)."""
+    onehot = jax.nn.one_hot(idx_tokens, seq_len, dtype=jnp.bool_)
+    return jnp.any(onehot, axis=-2)
+
+
+def block_mask_to_tokens(block_idx: jax.Array, block_tokens: int,
+                         seq_len: int) -> jax.Array:
+    """(.., kb) block indices -> (.., S) token mask."""
+    n_blocks = seq_len // block_tokens
+    onehot = jax.nn.one_hot(block_idx, n_blocks, dtype=jnp.bool_)
+    blocks = jnp.any(onehot, axis=-2)                       # (.., n_blocks)
+    return jnp.repeat(blocks, block_tokens, axis=-1)
+
+
+def residency_split(idx_tokens: jax.Array, shard_bounds) -> list:
+    """Partition selected canonical indices by holder: holder j owns
+    [bounds[j], bounds[j+1]). Returns per-holder *local* masks — the
+    distributed form of the selection (§5.4). Host-side helper for the
+    serving engine (numpy semantics, small arrays)."""
+    import numpy as np
+    idx = np.asarray(idx_tokens)
+    out = []
+    for j in range(len(shard_bounds) - 1):
+        lo, hi = shard_bounds[j], shard_bounds[j + 1]
+        local = idx[(idx >= lo) & (idx < hi)] - lo
+        mask = np.zeros(hi - lo, bool)
+        mask[local] = True
+        out.append(mask)
+    return out

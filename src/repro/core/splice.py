@@ -1,0 +1,71 @@
+"""FETCH — move-the-cache: bulk pull + delta-rotation splice (§2.2, §7).
+
+The splice re-homes a contiguous chunk cached at canonical offset p0 to the
+requester's offset p0 + delta: a *purely positional* rotation of the
+64-wide decoupled-RoPE band of every entry (the latent 512 columns are
+position-invariant — that is what lets a chunk be reused across sessions at
+all). The rotation angle per entry depends only on delta, not on the entry's
+own position, which is why the splice is flat in chunk size (§7).
+
+Under sparse *selection* the chosen entries are attended at their canonical
+positions, so no rotation is admissible: applying it anyway diverges 25-56%
+from the reference (§3.3) — tests/test_fetch_splice.py reproduces this.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.mla import MLAConfig
+
+
+def splice_delta_rotate(ckv_chunk: jax.Array, delta, cfg: MLAConfig,
+                        rotate_fn=None) -> jax.Array:
+    """Re-home a fetched chunk: rotate the rope band by delta positions.
+
+    ckv_chunk (..., S, d_qk) -> same shape. rotate_fn overrides the inner op
+    (e.g. the Pallas delta_rotate kernel)."""
+    d_c = cfg.kv_lora_rank
+    latent, band = ckv_chunk[..., :d_c], ckv_chunk[..., d_c:]
+    if rotate_fn is not None:
+        band = rotate_fn(band, delta)
+    else:
+        band = L.delta_rotate(band, delta, cfg.qk_rope_head_dim,
+                              cfg.rope_theta)
+    return jnp.concatenate([latent, band], axis=-1)
+
+
+def fetch_chunk(local_pool: jax.Array, remote_ckv: jax.Array, delta,
+                dst_offset: int, cfg: MLAConfig, holder: int, requester: int,
+                axis: str = "instance", rotate_fn=None) -> jax.Array:
+    """The full FETCH primitive inside shard_map: pull the chunk across the
+    instance axis (one bulk ppermute — coalesced, sees link peak §8), apply
+    the delta-rotation splice, scatter into the requester's pool.
+
+    delta == 0 (true-prefix re-home, §6.3) elides the rotation — pass
+    delta=None to express that statically."""
+    pulled = lax.ppermute(remote_ckv, axis, [(holder, requester)])
+    if delta is not None:
+        pulled = splice_delta_rotate(pulled, delta, cfg, rotate_fn)
+    return lax.dynamic_update_slice_in_dim(local_pool, pulled, dst_offset,
+                                           axis=local_pool.ndim - 2)
+
+
+def fetch_scattered_gather(local_pool: jax.Array, remote_ckv: jax.Array,
+                           indices: jax.Array, dst_offset: int,
+                           cfg: MLAConfig, holder: int, requester: int,
+                           axis: str = "instance") -> jax.Array:
+    """The selection-regime FETCH (§5.4): gather k scattered entries from the
+    holder and pull them. NO splice — the entries stay at canonical positions
+    (the requester must carry their position metadata). The gather defeats
+    bulk coalescing: per-entry indexing on the holder side, one transfer per
+    holder — the cost shape Fig 4a measures."""
+    gathered = jnp.take(remote_ckv, indices, axis=0)
+    pulled = lax.ppermute(gathered, axis, [(holder, requester)])
+    return lax.dynamic_update_slice_in_dim(local_pool, pulled, dst_offset,
+                                           axis=local_pool.ndim - 2)

@@ -1,0 +1,81 @@
+"""Deterministic, stateless data pipeline.
+
+batch_at(step) is a pure function of (seed, step) — no iterator state — so
+a restart from checkpoint step K replays exactly the batches K, K+1, ...
+(the exact-resume property the fault-tolerant loop relies on; DESIGN.md §5).
+Synthetic corpus: a Zipf-ish token stream with document structure (repeated
+canonical chunks) so serving examples exercise real cross-request reuse.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    family: str = "dense"         # vlm/audio add stub modality inputs
+    d_model: int = 0
+    vlm_patches: int = 0
+    enc_seq: int = 0
+
+
+class SyntheticPipeline:
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+
+    def batch_at(self, step: int) -> Dict[str, jax.Array]:
+        c = self.cfg
+        key = jax.random.fold_in(jax.random.PRNGKey(c.seed), step)
+        kt, kc, kp, kf = jax.random.split(key, 4)
+        # Zipf-ish marginal (squared uniform) + copy structure: with prob
+        # 1/2 a token repeats its predecessor — a learnable bigram signal
+        # (training-loss sanity checks depend on learnability)
+        u = jax.random.uniform(kt, (c.global_batch, c.seq_len + 1))
+        fresh = (jnp.square(u) * (c.vocab - 1)).astype(jnp.int32)
+        copy = jax.random.bernoulli(kc, 0.5, fresh.shape)
+
+        def chain(prev, inp):
+            f, cp = inp
+            tok = jnp.where(cp, prev, f)
+            return tok, tok
+
+        _, toks = jax.lax.scan(
+            chain, fresh[:, 0],
+            (fresh.T, copy.T))
+        tokens = toks.T
+        batch = {"tokens": tokens[:, :-1], "targets": tokens[:, 1:]}
+        if c.family == "vlm":
+            batch["patch_embeds"] = 0.02 * jax.random.normal(
+                kp, (c.global_batch, c.vlm_patches, c.d_model), jnp.bfloat16)
+        if c.family == "audio":
+            batch["frame_embeds"] = 0.02 * jax.random.normal(
+                kf, (c.global_batch, c.enc_seq, c.d_model), jnp.bfloat16)
+        return batch
+
+    @staticmethod
+    def for_model(mcfg, seq_len: int, global_batch: int, seed: int = 0):
+        return SyntheticPipeline(DataConfig(
+            vocab=mcfg.vocab,
+            seq_len=seq_len if mcfg.family != "vlm"
+            else seq_len - mcfg.vlm_patches,
+            global_batch=global_batch, seed=seed, family=mcfg.family,
+            d_model=mcfg.d_model, vlm_patches=mcfg.vlm_patches,
+            enc_seq=mcfg.enc_seq))
+
+
+def canonical_corpus(n_chunks: int, chunk_tokens: int, vocab: int,
+                     seed: int = 1) -> np.ndarray:
+    """Provider-curated canonical chunks (§1): (n_chunks, chunk_tokens)
+    immutable token blocks, shared across tenants."""
+    rng = np.random.RandomState(seed)
+    return rng.randint(0, vocab, (n_chunks, chunk_tokens)).astype(np.int32)

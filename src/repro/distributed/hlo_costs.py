@@ -1,0 +1,376 @@
+"""Trip-count-aware cost extraction from compiled (scheduled) HLO text.
+
+XLA's compiled.cost_analysis() counts a while-loop body ONCE, so every
+scan-over-layers model under-reports FLOPs/bytes/collectives by ~n_layers
+(verified: an 8-step lax.scan reports 1/8 the unrolled flops). This parser
+rebuilds the costs from the HLO itself:
+
+* per computation, a symbol table name -> shape (from parameter decls and
+  instruction results) supplies operand shapes (scheduled HLO does not
+  print operand types inline);
+* while-loops contribute body+condition costs x trip count (the loop-bound
+  constant in the condition computation — jax scans lower to a 0..L LT
+  compare);
+* flops: dot = 2 * out_elems * contracted_elems; convolution = 2 * out *
+  kernel_elems;
+* traffic_bytes: result + operand bytes of non-trivial instructions (the
+  HBM-traffic proxy cost_analysis uses per fusion);
+* collectives: result bytes and ring-model wire bytes per device.
+
+tests/test_hlo_costs.py validates against XLA's own numbers on unscanned
+graphs and against trip-count scaling on (nested) scans.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.distributed.hlo_analysis import _DTYPE_BYTES, COLLECTIVE_OPS
+
+_SHAPE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HEAD = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((?P<params>.*)\)\s*->")
+_INSTR_HEAD = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPNAME = re.compile(r"\s*([\w\-]+)\s*\(")
+_PARAM_DECL = re.compile(r"([\w.\-]+)\s*:\s*([a-z][a-z0-9]*\[[0-9,]*\]|\([^)]*\))")
+_WHILE_ATTRS = re.compile(r"condition=%?([\w.\-]+)")
+_WHILE_BODY = re.compile(r"body=%?([\w.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_NAME = re.compile(r"%?([\w.\-]+)")
+
+
+def _balanced(s: str, start: int = 0):
+    """Span of the balanced-paren group starting at s[start] == '('."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return start, i
+    return start, len(s) - 1
+
+
+def parse_instr(line: str):
+    """-> (name, result_shape, op, operands, attrs) or None. Handles nested
+    tuple result shapes (scan carries) via balanced-paren scanning."""
+    hm = _INSTR_HEAD.match(line)
+    if not hm:
+        return None
+    name = hm.group(1)
+    rest = line[hm.end():]
+    if rest.startswith("("):
+        a, b = _balanced(rest, 0)
+        shape, rest2 = rest[a:b + 1], rest[b + 1:]
+    else:
+        sm = re.match(r"[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?", rest)
+        if not sm:
+            return None
+        shape, rest2 = sm.group(0), rest[sm.end():]
+    om = _OPNAME.match(rest2)
+    if not om:
+        return None
+    op = om.group(1)
+    a, b = _balanced(rest2, rest2.index("(", om.start(1)))
+    operands = rest2[a + 1:b]
+    attrs = rest2[b + 1:]
+    return name, shape, op, operands, attrs
+
+TRIVIAL_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast",
+               "constant", "iota", "after-all", "copy-start", "copy-done",
+               "while", "conditional", "call", "partition-id", "replica-id"}
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    elems = byts = 0
+    for m in _SHAPE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = int(np.prod([int(d) for d in dims.split(",")])) if dims else 1
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    lines: List[str]
+    symbols: Dict[str, str]      # instruction/param name -> shape string
+
+
+def split_computations(hlo: str) -> Tuple[Dict[str, "Computation"], str]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = ""
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if cur is None:
+            if line.endswith("{"):
+                m = _COMP_HEAD.match(line[:-1].strip())
+                if m:
+                    cur = Computation(m.group(2), [], {})
+                    if m.group(1):
+                        entry = m.group(2)
+                    for pm in _PARAM_DECL.finditer(m.group("params") or ""):
+                        cur.symbols[pm.group(1)] = pm.group(2)
+        else:
+            if line == "}":
+                comps[cur.name] = cur
+                cur = None
+            elif line:
+                cur.lines.append(line)
+                pi = parse_instr(line)
+                if pi:
+                    cur.symbols[pi[0]] = pi[1]
+    return comps, entry
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_result_bytes: float = 0.0
+    collective_wire_bytes: float = 0.0
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "HloCosts", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.traffic_bytes += other.traffic_bytes * mult
+        self.collective_result_bytes += other.collective_result_bytes * mult
+        self.collective_wire_bytes += other.collective_wire_bytes * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] += v * mult
+
+
+def _trip_count(cond: Optional[Computation]) -> int:
+    if cond is None:
+        return 1
+    consts = [int(m.group(1)) for line in cond.lines
+              for m in _CONST_INT.finditer(line)]
+    return max(consts) if consts else 1
+
+
+def analyse_hlo(hlo: str, n_devices: int = 1) -> HloCosts:
+    comps, entry = split_computations(hlo)
+    if not entry:
+        return HloCosts()
+    memo: Dict[str, HloCosts] = {}
+
+    def operand_bytes(comp: Computation, operands: str) -> int:
+        total = 0
+        for om in _OPERAND_NAME.finditer(operands):
+            shape = comp.symbols.get(om.group(1))
+            if shape:
+                total += _shape_elems_bytes(shape)[1]
+        return total
+
+    _fusion_access_memo: Dict[str, tuple] = {}
+
+    def fusion_param_access(name: str) -> tuple:
+        """(per-parameter accessed bytes, result_bytes_override | None).
+
+        * a param consumed only through dynamic-slice/gather counts its
+          slice bytes (the layer-stack read of scan-over-layers);
+        * a param consumed (possibly through dtype converts) as the BUFFER
+          operand of a dynamic-update-slice whose shape matches the fusion
+          result is an IN-PLACE update fusion — XLA:TPU aliases it, so the
+          buffer read/write does not hit HBM: param access = 0 and the
+          fusion result counts as 2x the update-slice bytes (§Perf P2: the
+          scan-ys cache write was otherwise billed 59 full-cache passes);
+        * dtype converts are transparent for this analysis (the TPU target
+          computes bf16 natively; CPU float-normalization inserts them).
+        """
+        if name in _fusion_access_memo:
+            return _fusion_access_memo[name]
+        comp = comps.get(name)
+        out: Dict[int, float] = {}
+        if comp is None:
+            return out, None
+        param_idx: Dict[str, int] = {}
+        full_bytes: Dict[str, int] = {}
+        sliced: Dict[str, float] = {}
+        used_whole: Dict[str, bool] = {}
+        # alias: names reachable from a param via convert/bitcast/copy only
+        alias: Dict[str, str] = {}
+        root_shape = None
+        dus_inplace: Dict[str, float] = {}      # param name -> update bytes
+        for line in comp.lines:
+            pi = parse_instr(line)
+            if not pi:
+                continue
+            iname, shape, op, operands, _ = pi
+            if line.startswith("ROOT"):
+                root_shape = shape
+            if op == "parameter":
+                m = re.search(r"parameter\((\d+)\)", line)
+                if m:
+                    param_idx[iname] = int(m.group(1))
+                    full_bytes[iname] = _shape_elems_bytes(shape)[1]
+                continue
+            names = [m.group(1) for m in _OPERAND_NAME.finditer(operands)]
+            src = [alias.get(nm, nm) for nm in names]
+            if op in ("convert", "bitcast", "copy", "reshape") and src:
+                if src[0] in param_idx or src[0] in alias.values():
+                    alias[iname] = src[0]
+                continue
+            for pos, nm in enumerate(src):
+                if nm not in param_idx:
+                    continue
+                if op in ("dynamic-slice", "gather") and pos == 0:
+                    sliced[nm] = sliced.get(nm, 0.0) + \
+                        _shape_elems_bytes(shape)[1]
+                elif op == "dynamic-update-slice" and pos == 0:
+                    upd_shape = comp.symbols.get(names[1], "") \
+                        if len(names) > 1 else ""
+                    dus_inplace[nm] = 2.0 * _shape_elems_bytes(upd_shape)[1]
+                    # the DUS result aliases the param buffer
+                    alias[iname] = nm
+                else:
+                    used_whole[nm] = True
+        # pure dtype-conversion fusion (only convert/bitcast/copy/reshape):
+        # a CPU float-normalization artifact — free on the bf16-native TPU
+        # target
+        pure_convert = all(
+            (parse_instr(l) or (None,) * 5)[2] in
+            ("parameter", "convert", "bitcast", "copy", "reshape", None)
+            for l in comp.lines)
+        result_override = None
+        if pure_convert:
+            for nm, idx in param_idx.items():
+                out[idx] = 0.0
+            _fusion_access_memo[name] = (out, 0.0)
+            return out, 0.0
+        for nm, idx in param_idx.items():
+            if nm in dus_inplace and not used_whole.get(nm):
+                out[idx] = 0.0
+                result_override = dus_inplace[nm]
+            elif used_whole.get(nm) or nm not in sliced:
+                out[idx] = float(full_bytes.get(nm, 0))
+            else:
+                out[idx] = min(float(full_bytes.get(nm, 0)), sliced[nm])
+        _fusion_access_memo[name] = (out, result_override)
+        return out, result_override
+
+    def comp_cost(name: str, depth: int = 0) -> HloCosts:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        total = HloCosts()
+        if comp is None or depth > 60:
+            return total
+        memo[name] = total            # guard cycles
+        for line in comp.lines:
+            pi = parse_instr(line)
+            if not pi:
+                continue
+            _, res_shape, op, operands, attrs = pi
+            res_elems, res_bytes = _shape_elems_bytes(res_shape)
+
+            if op == "while":
+                cond = _WHILE_ATTRS.search(attrs)
+                body = _WHILE_BODY.search(attrs)
+                trips = _trip_count(comps.get(cond.group(1)) if cond else None)
+                if body:
+                    total.add(comp_cost(body.group(1), depth + 1), trips)
+                if cond:
+                    total.add(comp_cost(cond.group(1), depth + 1), trips)
+                continue
+            if op in ("call", "conditional"):
+                for cm in re.finditer(r"(?:to_apply|calls)=%?([\w.\-]+)",
+                                      attrs):
+                    total.add(comp_cost(cm.group(1), depth + 1), 1.0)
+                bm = re.search(r"branch_computations=\{([^}]*)\}", attrs)
+                if bm:
+                    for b in _OPERAND_NAME.finditer(bm.group(1)):
+                        total.add(comp_cost(b.group(1), depth + 1), 1.0)
+                continue
+            if op in TRIVIAL_OPS:
+                continue
+
+            local = HloCosts()
+            if op == "dot":
+                first = _OPERAND_NAME.search(operands)
+                lhs_shape = comp.symbols.get(first.group(1), "") if first else ""
+                lhs_dims = _shape_dims(lhs_shape)
+                cm = _CONTRACT.search(attrs)
+                k = 1
+                if cm and lhs_dims:
+                    cdims = [int(d) for d in cm.group(1).split(",") if d]
+                    k = int(np.prod([lhs_dims[c] for c in cdims])) if cdims else 1
+                local.flops = 2.0 * res_elems * k
+            elif op == "convolution":
+                names = _OPERAND_NAME.findall(operands)
+                ker = comp.symbols.get(names[1], "") if len(names) > 1 else ""
+                kelems, _ = _shape_elems_bytes(ker)
+                local.flops = 2.0 * res_elems * max(1, kelems // max(
+                    1, (_shape_dims(ker) or [1])[0]))
+            base_op = op[:-6] if op.endswith("-start") else op
+            if base_op in COLLECTIVE_OPS and not op.endswith("-done"):
+                coll_bytes = res_bytes
+                if op.endswith("-start"):
+                    # async form: result is an (operand, dest) tuple — the
+                    # payload is the dest buffer (last component)
+                    shapes = list(_SHAPE.finditer(res_shape))
+                    if len(shapes) >= 2:
+                        coll_bytes = _shape_elems_bytes(
+                            shapes[-1].group(0))[1]
+                local.collective_result_bytes = coll_bytes
+                frac = (n_devices - 1) / max(1, n_devices)
+                if base_op == "all-reduce":
+                    local.collective_wire_bytes = 2 * coll_bytes * frac
+                elif base_op == "collective-permute":
+                    local.collective_wire_bytes = coll_bytes
+                else:
+                    local.collective_wire_bytes = coll_bytes * frac
+                local.collective_counts[base_op] = 1.0
+
+            if op == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", attrs)
+                access, res_override = fusion_param_access(cm.group(1)) \
+                    if cm else ({}, None)
+                names = [m.group(1)
+                         for m in _OPERAND_NAME.finditer(operands)]
+                tb = float(res_bytes) if res_override is None \
+                    else float(res_override)
+                for pos, nm in enumerate(names):
+                    shape = comp.symbols.get(nm)
+                    fb = _shape_elems_bytes(shape)[1] if shape else 0
+                    tb += access.get(pos, float(fb))
+                local.traffic_bytes = tb
+                if cm:       # fused dots still do flops
+                    local.flops += comp_cost(cm.group(1), depth + 1).flops
+            elif op in ("dynamic-slice", "gather"):
+                local.traffic_bytes = 2.0 * res_bytes     # slice in + out
+            elif op == "dynamic-update-slice":
+                # reads+writes the update region, not the whole buffer
+                names = [m.group(1)
+                         for m in _OPERAND_NAME.finditer(operands)]
+                upd = comp.symbols.get(names[1], "") if len(names) > 1 else ""
+                ub = _shape_elems_bytes(upd)[1]
+                local.traffic_bytes = 2.0 * ub
+            elif op.endswith("-done"):
+                local.traffic_bytes = 0.0     # counted at -start
+            else:
+                local.traffic_bytes = res_bytes + operand_bytes(comp,
+                                                                operands)
+            total.add(local, 1.0)
+        memo[name] = total
+        return total
+
+    return comp_cost(entry)

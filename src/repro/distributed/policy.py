@@ -1,0 +1,60 @@
+"""Activation-sharding policy context: the model code asks for constraints
+at named points (residual stream, logits); the launcher installs a policy
+for the active mesh. Keeps model code mesh-agnostic while enabling
+sequence-parallel residuals (Megatron-SP style) on the wide archs."""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Callable, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_POLICY: contextvars.ContextVar = contextvars.ContextVar("policy", default=None)
+
+
+class ShardingPolicy:
+    """kind -> PartitionSpec map applied via with_sharding_constraint."""
+
+    def __init__(self, mesh: Mesh, specs: dict):
+        self.mesh = mesh
+        self.specs = specs
+
+    def constrain(self, x, kind: str):
+        spec = self.specs.get(kind)
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+def sp_policy(mesh: Mesh, seq_shard: bool = True) -> ShardingPolicy:
+    """Residual stream (B, S, D): batch over (pod,data); with seq_shard,
+    sequence over model between blocks (SP)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+    residual = P(dp_entry, "model" if seq_shard else None, None)
+    return ShardingPolicy(mesh, {
+        "residual": residual,
+        "logits": P(dp_entry, None, "model"),
+    })
+
+
+def constrain(x, kind: str):
+    pol = _POLICY.get()
+    return pol.constrain(x, kind) if pol is not None else x
+
+
+def current() -> Optional[ShardingPolicy]:
+    return _POLICY.get()
+
+
+@contextlib.contextmanager
+def use_policy(policy: Optional[ShardingPolicy]):
+    tok = _POLICY.set(policy)
+    try:
+        yield
+    finally:
+        _POLICY.reset(tok)

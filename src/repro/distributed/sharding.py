@@ -1,0 +1,130 @@
+"""Logical-axis -> mesh sharding rules (MaxText-style), with divisibility
+fallback: a dim whose size does not divide the mapped mesh axes is
+replicated instead (e.g. 40 attention heads on a 16-wide model axis — the
+Qwen-32B family), and GSPMD handles the resulting re-layout. The fallback
+keeps every assigned arch compiling on the fixed production mesh; the perf
+cost shows up in the roofline's collective term (hillclimb material,
+EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.module import Param, is_param
+
+
+# logical axis -> mesh axes (tuple => combined). "fsdp" resolves to the
+# data axis (+ pod when present).
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "embed": ("fsdp",),          # FSDP: params sharded over data(+pod)
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "layer": (),                 # scan dim: never sharded
+}
+
+
+def _fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes or ()
+
+
+def _axis_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def resolve_rules(mesh: Mesh, rules: Optional[dict] = None) -> dict:
+    out = {}
+    for logical, axes in (rules or DEFAULT_RULES).items():
+        resolved = []
+        for a in axes:
+            if a == "fsdp":
+                resolved.extend(_fsdp_axes(mesh))
+            elif a in mesh.axis_names:
+                resolved.append(a)
+        out[logical] = tuple(resolved)
+    return out
+
+
+def spec_for(axes: Sequence[Optional[str]], shape: Sequence[int],
+             mesh: Mesh, rules: Optional[dict] = None,
+             no_fsdp_with: Sequence[str] = ()) -> P:
+    """Logical axes + dim sizes -> PartitionSpec with divisibility fallback.
+    Each mesh axis is used at most once per spec (GSPMD requirement).
+
+    no_fsdp_with: if the param carries any of these logical axes, its
+    fsdp-mapped dims are replicated instead (hillclimb H2: expert weights
+    sharded over `model` only — removes the per-microbatch all-gather of
+    expert stacks over the data axis, EXPERIMENTS.md §Perf)."""
+    rr = resolve_rules(mesh, rules)
+    fsdp = set(_fsdp_axes(mesh))
+    suppress_fsdp = any(a in no_fsdp_with for a in axes if a)
+    used = set()
+    entries = []
+    for name, dim in zip(axes, shape):
+        target = rr.get(name, ()) if name else ()
+        if suppress_fsdp:
+            target = tuple(a for a in target if a not in fsdp)
+        target = tuple(a for a in target if a not in used)
+        if target and dim % _axis_size(mesh, target) == 0:
+            entries.append(target if len(target) > 1 else target[0])
+            used.update(target)
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_shardings(param_tree, mesh: Mesh, rules: Optional[dict] = None,
+                    no_fsdp_with: Sequence[str] = ()):
+    """Tree of Param(value, axes) -> tree of NamedSharding (same structure
+    as split(param_tree)[0])."""
+    def one(p: Param):
+        return NamedSharding(mesh, spec_for(p.axes, p.value.shape, mesh,
+                                            rules, no_fsdp_with))
+    return jax.tree.map(one, param_tree, is_leaf=is_param)
+
+
+def state_shardings(param_tree, mesh: Mesh, rules: Optional[dict] = None,
+                    no_fsdp_with: Sequence[str] = ()):
+    """AdamW state shardings: m/v inherit the param sharding; step scalar
+    replicated."""
+    ps = param_shardings(param_tree, mesh, rules, no_fsdp_with)
+    return {"m": ps, "v": ps,
+            "step": NamedSharding(mesh, P())}
+
+
+def batch_sharding(mesh: Mesh) -> NamedSharding:
+    """Token batches: leading batch dim over (pod, data)."""
+    dp = _fsdp_axes(mesh)
+    return NamedSharding(mesh, P(dp if len(dp) > 1 else (dp[0] if dp else None)))
+
+
+def cache_spec(shape: Sequence[int], mesh: Mesh, seq_dim: int = 2,
+               batch_dim: int = 1) -> P:
+    """Decode-cache sharding: batch over (pod,data), SEQUENCE over model —
+    the cache is a partitioned canonical store along the sequence axis
+    (context-parallel serving), which is exactly the paper's multi-holder
+    residency; GSPMD's distributed softmax over the sharded axis realizes
+    the route+merge (DESIGN.md §2).
+
+    Falls back per-dim on divisibility (e.g. batch=1 long_500k: batch
+    replicated, sequence sharded)."""
+    dp = _fsdp_axes(mesh)
+    entries: list = [None] * len(shape)
+    if dp and shape[batch_dim] % _axis_size(mesh, dp) == 0:
+        entries[batch_dim] = dp if len(dp) > 1 else dp[0]
+    if "model" in mesh.axis_names and shape[seq_dim] % mesh.shape["model"] == 0:
+        entries[seq_dim] = "model"
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)

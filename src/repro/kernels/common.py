@@ -1,0 +1,18 @@
+"""Shared kernel plumbing: interpret-mode selection (TPU target, CPU
+validation — task spec) and tiling helpers."""
+
+from __future__ import annotations
+
+import jax
+
+MXU_LANE = 128        # MXU matmul dims want multiples of 128
+
+
+def use_interpret() -> bool:
+    """pl.pallas_call(interpret=True) on CPU (validation); compiled path on
+    real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def pad_to(n: int, m: int) -> int:
+    return (n + m - 1) // m * m

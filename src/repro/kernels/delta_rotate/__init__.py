@@ -1,0 +1,2 @@
+from repro.kernels.delta_rotate.ops import delta_rotate_band
+from repro.kernels.delta_rotate.ref import delta_rotate_ref

@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: delta-rotation of the decoupled-RoPE band.
+
+The FETCH splice's dominant cost (~80% of the ~3 ms, §2.2/§7) is this
+purely positional rotation. The angle depends only on delta — cos/sin are
+precomputed once (d_r/2 values) and broadcast from VMEM while (BS, d_r)
+tiles stream through; the kernel is bandwidth-bound and token-count-flat
+per launch, which is exactly the cost shape the paper measures.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(band_ref, cos_ref, sin_ref, out_ref):
+    x = band_ref[...].astype(jnp.float32)             # (BS, d_r)
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[:, :d2], x[:, d2:]
+    c = cos_ref[...].astype(jnp.float32)              # (1, d2)
+    s = sin_ref[...].astype(jnp.float32)
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def delta_rotate_pallas(band: jax.Array, cos: jax.Array, sin: jax.Array,
+                        block_s: int = 1024, interpret: bool = True):
+    """band (S, d_r); cos/sin (d_r/2,) for the fixed delta."""
+    S, d_r = band.shape
+    block_s = min(block_s, S)
+    assert S % block_s == 0, (S, block_s)
+    return pl.pallas_call(
+        _kernel,
+        grid=(S // block_s,),
+        in_specs=[
+            pl.BlockSpec((block_s, d_r), lambda i: (i, 0)),
+            pl.BlockSpec((1, d_r // 2), lambda i: (0, 0)),
+            pl.BlockSpec((1, d_r // 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_s, d_r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, d_r), band.dtype),
+        interpret=interpret,
+    )(band, cos[None], sin[None])

@@ -1,0 +1,26 @@
+"""jit'd public wrapper for the splice delta-rotation kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.delta_rotate.kernel import delta_rotate_pallas
+from repro.models.layers import rope_cos_sin
+
+
+@functools.partial(jax.jit, static_argnames=("head_dim", "theta", "block_s",
+                                             "interpret"))
+def delta_rotate_band(band: jax.Array, delta: jax.Array, *, head_dim: int,
+                      theta: float = 10000.0, block_s: int = 1024,
+                      interpret: Optional[bool] = None) -> jax.Array:
+    """Re-home a fetched chunk's rope band by delta positions (§2.2).
+    band (S, d_r). Plugs into core.splice.splice_delta_rotate(rotate_fn=...).
+    """
+    cos, sin = rope_cos_sin(jnp.asarray(delta, jnp.float32), head_dim, theta)
+    interp = use_interpret() if interpret is None else interpret
+    return delta_rotate_pallas(band, cos, sin, block_s, interp)

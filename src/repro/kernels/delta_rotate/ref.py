@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the FETCH-splice delta-rotation (§2.2)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import delta_rotate
+
+
+def delta_rotate_ref(band: jax.Array, delta, head_dim: int,
+                     theta: float = 10000.0) -> jax.Array:
+    """band (S, d_r) rope-encoded at cached positions -> re-homed by delta.
+    The per-layer splice hot-spot: launch-bound, token-count-flat (§7)."""
+    return delta_rotate(band, delta, head_dim, theta)

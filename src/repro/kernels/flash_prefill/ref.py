@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: causal latent attention over the c^KV store (the
+prefill/training hot-spot that fills the canonical cache)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_prefill_ref(q: jax.Array, ckv: jax.Array, d_v: int,
+                      scale: float = 1.0) -> jax.Array:
+    """q (B, Sq, H, D); ckv (B, Sk, D); causal with queries aligned to the
+    cache tail (query i attends entries [0, Sk - Sq + i]). Returns
+    (B, Sq, H, d_v) f32."""
+    B, Sq, H, D = q.shape
+    Sk = ckv.shape[1]
+    logits = jnp.einsum("bqhd,bkd->bhqk", q.astype(jnp.float32),
+                        ckv.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    mask = qpos >= jnp.arange(Sk)[None, :]
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkd->bqhd", p, ckv[..., :d_v].astype(jnp.float32))

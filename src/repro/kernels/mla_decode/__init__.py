@@ -1,0 +1,2 @@
+from repro.kernels.mla_decode.ops import mla_decode
+from repro.kernels.mla_decode.ref import mla_decode_ref

@@ -1,0 +1,31 @@
+"""jit'd public wrapper for the absorbed-MLA decode kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.merge import Partial
+from repro.kernels.common import use_interpret
+from repro.kernels.mla_decode.kernel import mla_decode_pallas
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("d_v", "scale", "block_s", "interpret"))
+def mla_decode(q: jax.Array, ckv: jax.Array,
+               lengths: Optional[jax.Array] = None, *, d_v: int = 512,
+               scale: float = 1.0, block_s: int = 512,
+               interpret: Optional[bool] = None) -> Partial:
+    """Absorbed-MLA decode partial: q (B, H, D) over ckv (B, S, D).
+
+    Returns Partial(o (B,H,d_v), m, l) — the (o, m, l) wire triple of §3.2.
+    """
+    if lengths is None:
+        lengths = jnp.full((q.shape[0],), ckv.shape[1], jnp.int32)
+    interp = use_interpret() if interpret is None else interpret
+    o, m, l = mla_decode_pallas(q, ckv, lengths.astype(jnp.int32), d_v,
+                                scale, block_s, interp)
+    return Partial(o=o, m=m, l=l)

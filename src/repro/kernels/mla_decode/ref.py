@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the absorbed-MLA decode kernel (the holder-side
+partial attention of ROUTE, §6.3 — our FlashMLA analogue)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mla_decode_ref(q: jax.Array, ckv: jax.Array, d_v: int,
+                   scale: float = 1.0):
+    """q (B, H, D); ckv (B, S, D) with values = ckv[..., :d_v].
+
+    Returns the normalized partial + sufficient statistic:
+    (o (B, H, d_v) f32, m (B, H) f32, l (B, H) f32)."""
+    logits = jnp.einsum("bhd,bsd->bhs", q.astype(jnp.float32),
+                        ckv.astype(jnp.float32)) * scale
+    m = jnp.max(logits, axis=-1)
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhs,bsd->bhd", p / l[..., None],
+                   ckv[..., :d_v].astype(jnp.float32))
+    return o, m, l

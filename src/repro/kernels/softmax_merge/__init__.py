@@ -1,0 +1,2 @@
+from repro.kernels.softmax_merge.ops import softmax_merge
+from repro.kernels.softmax_merge.ref import softmax_merge_ref

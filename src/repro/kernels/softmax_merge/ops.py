@@ -1,0 +1,21 @@
+"""jit'd public wrapper for the M-way merge kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.core.merge import Partial
+from repro.kernels.common import use_interpret
+from repro.kernels.softmax_merge.kernel import softmax_merge_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def softmax_merge(o: jax.Array, m: jax.Array, l: jax.Array, *,
+                  interpret: Optional[bool] = None) -> Partial:
+    """Merge M routed partials exactly (§3.3): o (M,B,H,d_v), m/l (M,B,H)."""
+    interp = use_interpret() if interpret is None else interpret
+    oo, mo, lo = softmax_merge_pallas(o, m, l, interp)
+    return Partial(o=oo, m=mo, l=lo)

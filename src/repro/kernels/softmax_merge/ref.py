@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: M-way online-softmax merge (== core.merge.merge_stacked).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.merge import Partial, merge_stacked
+
+
+def softmax_merge_ref(o: jax.Array, m: jax.Array, l: jax.Array) -> Partial:
+    """o (M, B, H, d_v); m/l (M, B, H) -> merged Partial (B, H, d_v)."""
+    return merge_stacked(o, m, l)

@@ -1,0 +1,2 @@
+from repro.kernels.sparse_select.ops import sparse_select_decode
+from repro.kernels.sparse_select.ref import sparse_select_ref

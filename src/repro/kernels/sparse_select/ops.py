@@ -1,0 +1,28 @@
+"""jit'd public wrapper for block-sparse selected attention."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.merge import Partial
+from repro.kernels.common import use_interpret
+from repro.kernels.sparse_select.kernel import sparse_select_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("d_v", "scale", "block_tokens",
+                                             "interpret"))
+def sparse_select_decode(q: jax.Array, ckv: jax.Array,
+                         block_idx: jax.Array, *, d_v: int = 512,
+                         scale: float = 1.0, block_tokens: int = 64,
+                         interpret: Optional[bool] = None) -> Partial:
+    """Selected-set decode partial (§5.4): the holder attends the indexer's
+    chosen blocks in place. Cost tracks KB (the selection budget), not the
+    resident store size."""
+    interp = use_interpret() if interpret is None else interpret
+    o, m, l = sparse_select_pallas(q, ckv, block_idx.astype(jnp.int32),
+                                   d_v, scale, block_tokens, interp)
+    return Partial(o=o, m=m, l=l)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for block-sparse selected attention (the DSA/NSA
+selection regime, §5.4, at TPU-native 64-token-block granularity)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sparse_select_ref(q: jax.Array, ckv: jax.Array, block_idx: jax.Array,
+                      d_v: int, block_tokens: int, scale: float = 1.0):
+    """q (B, H, D); ckv (B, S, D); block_idx (B, KB) selected block ids.
+
+    Gathers the selected blocks (canonical positions — no re-rotation, §3.3)
+    and attends. Returns (o (B,H,d_v), m, l) f32."""
+    B, KB = block_idx.shape
+
+    def one(qb, cb, ib):
+        blocks = cb.reshape(-1, block_tokens, cb.shape[-1])   # (NB, T, D)
+        sel = blocks[ib].reshape(KB * block_tokens, cb.shape[-1])
+        logits = (qb.astype(jnp.float32) @ sel.astype(jnp.float32).T) * scale
+        m = jnp.max(logits, axis=-1)
+        p = jnp.exp(logits - m[:, None])
+        l = jnp.sum(p, axis=-1)
+        o = (p / l[:, None]) @ sel[:, :d_v].astype(jnp.float32)
+        return o, m, l
+
+    return jax.vmap(one)(q, ckv, block_idx)

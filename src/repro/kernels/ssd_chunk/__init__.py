@@ -1,0 +1,2 @@
+from repro.kernels.ssd_chunk.ops import ssd_intra_chunk
+from repro.kernels.ssd_chunk.ref import ssd_intra_chunk_ref

@@ -1,0 +1,21 @@
+"""jit'd public wrapper for the fused SSD intra-chunk kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.common import use_interpret
+from repro.kernels.ssd_chunk.kernel import ssd_intra_chunk_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("hb", "interpret"))
+def ssd_intra_chunk(x, dt, A, B, C, *, hb: int = 8,
+                    interpret: Optional[bool] = None):
+    """Fused SSD intra-chunk: (y_intra, chunk_states, cum) with no
+    (Q,Q,H) HBM intermediates. Shapes as ssm.ssd_chunked's chunked
+    tensors: x (b,nc,Q,H,P), dt (b,nc,Q,H), A (H,), B/C (b,nc,Q,N)."""
+    interp = use_interpret() if interpret is None else interpret
+    return ssd_intra_chunk_pallas(x, dt, A, B, C, hb, interp)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the fused SSD intra-chunk kernel: the quadratic
+("attention-like") term, the per-chunk output state, and the cumulative
+decay — exactly the three quantities ssm.ssd_chunked materializes through
+HBM (the mamba-cell memory bottleneck in the §Roofline table)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_intra_chunk_ref(x, dt, A, B, C):
+    """x (b, nc, Q, H, P); dt (b, nc, Q, H) post-softplus; A (H,) negative;
+    B, C (b, nc, Q, N).
+
+    Returns (y_intra (b,nc,Q,H,P), states (b,nc,H,P,N), cum (b,nc,Q,H)),
+    all f32 — matching ssm.ssd_chunked's internals."""
+    Q = x.shape[2]
+    da = dt.astype(jnp.float32) * A[None, None, None]
+    cum = jnp.cumsum(da, axis=2)
+    expo = cum[:, :, :, None] - cum[:, :, None]          # (b,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    expo = jnp.where(causal[None, None, :, :, None], expo, -jnp.inf)
+    L = jnp.exp(expo)
+    CB = jnp.einsum("bcqn,bckn->bcqk", C.astype(jnp.float32),
+                    B.astype(jnp.float32))
+    G = CB[..., None] * L
+    y = jnp.einsum("bcqkh,bckh,bckhp->bcqhp", G, dt.astype(jnp.float32),
+                   x.astype(jnp.float32))
+    seg = cum[:, :, -1]
+    decay_out = jnp.exp(seg[:, :, None] - cum)
+    states = jnp.einsum("bckh,bckh,bckn,bckhp->bchpn", decay_out,
+                        dt.astype(jnp.float32), B.astype(jnp.float32),
+                        x.astype(jnp.float32))
+    return y, states, cum

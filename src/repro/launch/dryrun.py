@@ -1,0 +1,277 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (task spec): for every (arch x shape x mesh) cell,
+jit(step).lower(**ShapeDtypeStructs).compile() must succeed on the
+production meshes — (16,16)=(data,model) single-pod and (2,16,16)=
+(pod,data,model) multi-pod — and we record memory_analysis, cost_analysis
+and the HLO collective schedule for the roofline (EXPERIMENTS.md).
+
+Usage:
+    python -m repro.launch.dryrun --arch deepseek-v2-236b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (ALIASES, ARCH_IDS, SHAPES, all_cells, get_config,
+                           supported_shapes)
+from repro.core import constants as C
+from repro.distributed import policy as POL
+from repro.distributed.hlo_analysis import flops_and_bytes, parse_collectives
+from repro.distributed.hlo_costs import analyse_hlo
+from repro.distributed.sharding import param_shardings, state_shardings
+from repro.launch import input_specs as IS
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as MD
+from repro.models.module import split
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.train.step import TrainConfig, make_train_step
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / \
+    "benchmarks" / "results" / "dryrun"
+
+# per-arch grad-accumulation microbatches for train_4k (activation memory
+# knob; see EXPERIMENTS.md §Perf for the tuning trail)
+N_MICRO = {
+    "nemotron_4_340b": 16,
+    "deepseek_v2_236b": 4,
+    "qwen3_moe_235b": 4,
+    "qwen1_5_32b": 2,
+    "qwen2_5_32b": 2,
+    "qwen3_32b": 2,
+}
+
+OPT = AdamWConfig()
+OPT_BF16 = dataclasses.replace(OPT, state_dtype=jnp.bfloat16)
+
+
+def _arch_cfg(arch: str, shape_name: str) -> MD.ModelConfig:
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and cfg.attn_type == "mla":
+        # DSA-style selection at the V3.2/GLM-5.1 budget (paper §5.4)
+        cfg = dataclasses.replace(cfg, selection_k=2048)
+    return cfg
+
+
+def _opt_cfg(arch: str) -> AdamWConfig:
+    # bf16 optimizer states for the 340B config (memory posture, DESIGN §5)
+    return OPT_BF16 if ALIASES.get(arch, arch) == "nemotron_4_340b" else OPT
+
+
+def build_lowered(arch: str, shape_name: str, mesh, sp_residual: bool = True,
+                  n_micro: int = 0, no_expert_fsdp: bool = False,
+                  no_remat: bool = False):
+    """Build and lower the step for one cell. Returns (lowered, meta).
+
+    Hillclimb knobs (EXPERIMENTS.md §Perf): n_micro overrides the grad-
+    accumulation depth; no_expert_fsdp shards expert stacks over `model`
+    only (no per-microbatch all-gather of experts over `data`)."""
+    cfg = _arch_cfg(arch, shape_name)
+    if no_remat:
+        # hillclimb B3: with SP residuals the per-layer boundary is small;
+        # dropping remat removes the fwd-in-bwd recompute pass and with it
+        # one full round of FSDP weight re-gathers
+        cfg = dataclasses.replace(cfg, remat=False)
+    shape = SHAPES[shape_name]
+    params_abs = jax.eval_shape(
+        functools.partial(MD.init_model, cfg), jax.random.PRNGKey(0))
+    p_vals, _ = split(params_abs)
+    no_fsdp = ("expert",) if no_expert_fsdp else ()
+    # param_shardings replaces Param leaves with NamedSharding — same
+    # container structure as the split value tree.
+    p_shard = param_shardings(params_abs, mesh, no_fsdp_with=no_fsdp)
+
+    policy = POL.sp_policy(mesh, seq_shard=sp_residual)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(n_micro=n_micro or
+                           N_MICRO.get(ALIASES.get(arch, arch), 1))
+        step = make_train_step(cfg, _opt_cfg(arch), tcfg,
+                               param_shardings=p_shard)
+        opt_abs = jax.eval_shape(
+            functools.partial(adamw_init, cfg=_opt_cfg(arch)), p_vals)
+        o_shard = state_shardings(params_abs, mesh, no_fsdp_with=no_fsdp)
+        batch_abs = IS.train_batch_specs(cfg, shape)
+        b_shard = IS.train_batch_shardings(batch_abs, mesh)
+        with POL.use_policy(policy):
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, o_shard, b_shard),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(p_vals, opt_abs, batch_abs)
+    elif shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return MD.prefill(params, cfg, batch)
+        batch_abs = IS.train_batch_specs(cfg, shape)
+        b_shard = IS.train_batch_shardings(batch_abs, mesh)
+        with POL.use_policy(policy):
+            jitted = jax.jit(prefill_step, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(p_vals, batch_abs)
+    else:  # decode
+        def serve_step(params, state, token, pos, widx):
+            return MD.decode_step(params, cfg, state, token, pos, widx)
+        state_abs = IS.decode_state_specs(cfg, shape)
+        st_shard = IS.decode_state_shardings(cfg, shape, mesh)
+        tok_abs = IS.decode_input_specs(cfg, shape)
+        tok_shard = IS.decode_input_shardings(mesh, shape.global_batch)
+        jitted = jax.jit(serve_step,
+                         in_shardings=(p_shard, st_shard) + tok_shard,
+                         donate_argnums=(1,))
+        lowered = jitted.lower(p_vals, state_abs, *tok_abs)
+
+    meta = {"arch": ALIASES.get(arch, arch), "shape": shape_name,
+            "kind": shape.kind,
+            "n_params": int(sum(np.prod(l.shape)
+                                for l in jax.tree.leaves(p_vals)))}
+    return lowered, meta
+
+
+def analyse(lowered, compiled, mesh, meta) -> dict:
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    out = dict(meta)
+    out["n_devices"] = n_dev
+    out["mesh"] = dict(mesh.shape)
+    # --- memory ---
+    try:
+        ma = compiled.memory_analysis()
+        out["memory_analysis"] = {
+            k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)}
+    except Exception as e:                                   # noqa: BLE001
+        out["memory_analysis"] = {"error": str(e)}
+    # --- cost: XLA's own numbers (while-bodies counted ONCE — kept as a
+    # diagnostic) + our trip-count-corrected HLO walk (the roofline input;
+    # see distributed/hlo_costs.py) ---
+    try:
+        ca = compiled.cost_analysis()
+        flops, bytes_acc = flops_and_bytes(ca)
+        out["xla_flops_unscaled"] = flops
+        out["xla_bytes_unscaled"] = bytes_acc
+    except Exception as e:                                   # noqa: BLE001
+        out["cost_error"] = str(e)
+    try:
+        txt = compiled.as_text()
+        costs = analyse_hlo(txt, n_dev)
+        out["hlo_flops"] = costs.flops
+        out["hlo_bytes"] = costs.traffic_bytes
+        out["collectives"] = {
+            "counts": dict(costs.collective_counts),
+            "result_bytes": costs.collective_result_bytes,
+            "wire_bytes": costs.collective_wire_bytes}
+        st = parse_collectives(txt, n_dev)      # static (per-text) counts
+        out["collectives"]["static_counts"] = st.counts
+    except Exception as e:                                   # noqa: BLE001
+        out["hlo_flops"] = out["hlo_bytes"] = None
+        out["collectives"] = {"error": str(e)}
+    return out
+
+
+def roofline_terms(rec: dict) -> dict:
+    """The three roofline terms, seconds (task spec)."""
+    flops, byts = rec.get("hlo_flops"), rec.get("hlo_bytes")
+    wire = rec.get("collectives", {}).get("wire_bytes")
+    terms = {}
+    # cost_analysis is per-device under SPMD; the roofline divides global
+    # quantities by chips — per-device numbers are already that quotient.
+    terms["compute_s"] = flops / C.TPU_PEAK_FLOPS_BF16 if flops else None
+    terms["memory_s"] = byts / C.TPU_HBM_BW if byts else None
+    terms["collective_s"] = wire / C.TPU_ICI_BW if wire is not None else None
+    vals = {k: v for k, v in terms.items() if v}
+    terms["dominant"] = max(vals, key=vals.get) if vals else None
+    return terms
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: pathlib.Path, force: bool = False,
+             sp_residual: bool = True, tag: str = "",
+             n_micro: int = 0, no_expert_fsdp: bool = False,
+             no_remat: bool = False) -> dict:
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    name = f"{ALIASES.get(arch, arch)}__{shape_name}__{mesh_tag}{tag}"
+    out_path = out_dir / f"{name}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        lowered, meta = build_lowered(arch, shape_name, mesh, sp_residual,
+                                      n_micro, no_expert_fsdp, no_remat)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        rec = analyse(lowered, compiled, mesh, meta)
+        rec["ok"] = True
+        rec["t_lower_s"] = round(t_lower, 2)
+        rec["t_compile_s"] = round(t_compile, 2)
+        rec["roofline"] = roofline_terms(rec)
+    except Exception as e:                                   # noqa: BLE001
+        rec = {"arch": ALIASES.get(arch, arch), "shape": shape_name,
+               "mesh": mesh_tag, "ok": False, "error": str(e),
+               "traceback": traceback.format_exc()[-4000:]}
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1, default=str))
+    status = "OK" if rec.get("ok") else "FAIL"
+    print(f"[dryrun] {name}: {status} ({time.time()-t0:.1f}s)", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-sp", action="store_true",
+                    help="disable sequence-parallel residuals (baseline)")
+    ap.add_argument("--n-micro", type=int, default=0,
+                    help="override grad-accumulation microbatches")
+    ap.add_argument("--no-expert-fsdp", action="store_true",
+                    help="shard expert stacks over model only (H2)")
+    ap.add_argument("--no-remat", action="store_true",
+                    help="disable activation remat (B3)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+
+    cells = []
+    if args.all:
+        for a, s in all_cells():
+            cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    n_fail = 0
+    for a, s in cells:
+        for mp in meshes:
+            rec = run_cell(a, s, mp, out_dir, force=args.force,
+                           sp_residual=not args.no_sp, tag=args.tag,
+                           n_micro=args.n_micro,
+                           no_expert_fsdp=args.no_expert_fsdp,
+                           no_remat=args.no_remat)
+            n_fail += 0 if rec.get("ok") else 1
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""ShapeDtypeStruct stand-ins for every model input per (arch, shape) cell
+(task spec: weak-type-correct, shardable, no device allocation) + the
+matching sharding trees."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeSpec
+from repro.distributed.sharding import _axis_size, _fsdp_axes
+from repro.models import model as MD
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dp_entry(mesh: Mesh):
+    dp = _fsdp_axes(mesh)
+    return dp if len(dp) > 1 else (dp[0] if dp else None)
+
+
+def train_batch_specs(cfg: MD.ModelConfig, shape: ShapeSpec):
+    """Token batch ShapeDtypeStructs for a train/prefill shape."""
+    B, S = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        text = S - cfg.vlm_patches
+        batch["tokens"] = _sds((B, text), jnp.int32)
+        batch["targets"] = _sds((B, text), jnp.int32)
+        batch["patch_embeds"] = _sds((B, cfg.vlm_patches, cfg.d_model),
+                                     jnp.bfloat16)
+    elif cfg.family == "audio":
+        batch["tokens"] = _sds((B, S), jnp.int32)
+        batch["targets"] = _sds((B, S), jnp.int32)
+        batch["frame_embeds"] = _sds((B, cfg.enc_seq, cfg.d_model),
+                                     jnp.bfloat16)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+        batch["targets"] = _sds((B, S), jnp.int32)
+    return batch
+
+
+def train_batch_shardings(batch_specs, mesh: Mesh):
+    dp = _dp_entry(mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, P(dp, *([None] * (len(s.shape) - 1)))),
+        batch_specs)
+
+
+# ---------------------------------------------------------------------------
+# Decode state: abstract caches + shardings per family.
+# ---------------------------------------------------------------------------
+
+def decode_state_specs(cfg: MD.ModelConfig, shape: ShapeSpec):
+    return MD.init_decode_state(cfg, shape.global_batch, shape.seq_len,
+                                abstract=True)
+
+
+def _seq_axes(mesh: Mesh, batch: int, seq: int):
+    """Sequence-dim sharding for caches: 'model', plus any dp axes the batch
+    cannot use (long_500k batch=1 => the whole mesh shards the sequence —
+    the paper's partitioned canonical store)."""
+    dp = _fsdp_axes(mesh)
+    batch_ok = dp and batch % _axis_size(mesh, dp) == 0
+    axes = tuple() if batch_ok else dp
+    if "model" in mesh.axis_names:
+        axes = axes + ("model",)
+    if axes and seq % _axis_size(mesh, axes) == 0:
+        batch_entry = _dp_entry(mesh) if batch_ok else None
+        return batch_entry, (axes if len(axes) > 1 else axes[0])
+    return (_dp_entry(mesh) if batch_ok else None), None
+
+
+def decode_state_shardings(cfg: MD.ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    B, S = shape.global_batch, shape.seq_len
+    b_entry, s_entry = _seq_axes(mesh, B, S)
+
+    def _entry_size(entry):
+        if not entry:
+            return 1
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        return _axis_size(mesh, axes)
+
+    def kv_shard(spec):   # (L, B, S', Hkv, hd) — S' may be enc_seq (1500)
+        se = s_entry if (s_entry and
+                         spec.shape[2] % _entry_size(s_entry) == 0) else None
+        return NamedSharding(mesh, P(None, b_entry, se))
+
+    def mla_shard(spec):  # (L, B, S, d_qk)
+        return NamedSharding(mesh, P(None, b_entry, s_entry))
+
+    def ssm_h_shard(spec):   # (..., B, H, Phd, N)
+        nd = len(spec.shape)
+        lead = [None] * (nd - 4)
+        h_entry = ("model" if "model" in mesh.axis_names
+                   and spec.shape[-3] % mesh.shape["model"] == 0 else None)
+        return NamedSharding(mesh, P(*lead, b_entry, h_entry, None, None))
+
+    def conv_shard(spec):    # (..., B, K-1, C)
+        nd = len(spec.shape)
+        lead = [None] * (nd - 3)
+        c_entry = ("model" if "model" in mesh.axis_names
+                   and spec.shape[-1] % mesh.shape["model"] == 0 else None)
+        return NamedSharding(mesh, P(*lead, b_entry, None, c_entry))
+
+    def classify(spec):
+        shp = spec.shape
+        if cfg.attn_type == "mla" and len(shp) == 4 and shp[-1] == cfg.mla.d_qk:
+            return mla_shard(spec)
+        if cfg.ssm is not None and \
+                shp[-1] == cfg.ssm.d_inner + 2 * cfg.ssm.d_state:
+            return conv_shard(spec)               # mamba conv left-context
+        if len(shp) >= 4 and cfg.ssm is not None \
+                and shp[-1] == cfg.ssm.d_state \
+                and shp[-2] == cfg.ssm.head_dim:
+            return ssm_h_shard(spec)              # mamba recurrent state
+        acfg = cfg.attn_cfg
+        if len(shp) == 5 and shp[-1] == acfg.hd \
+                and shp[-2] == acfg.n_kv_heads:   # gqa kv cache
+            return kv_shard(spec)
+        return NamedSharding(mesh, P())
+
+    state = decode_state_specs(cfg, shape)
+    return jax.tree.map(classify, state)
+
+
+def decode_input_specs(cfg: MD.ModelConfig, shape: ShapeSpec):
+    B = shape.global_batch
+    return (_sds((B, 1), jnp.int32),           # token
+            _sds((B, 1), jnp.int32),           # pos
+            _sds((), jnp.int32))               # widx
+
+
+def decode_input_shardings(mesh: Mesh, batch: int = 0):
+    dp = _dp_entry(mesh)
+    dp_axes = _fsdp_axes(mesh)
+    if dp_axes and batch % _axis_size(mesh, dp_axes) != 0:
+        dp = None                              # long_500k: batch=1 replicated
+    return (NamedSharding(mesh, P(dp, None)),
+            NamedSharding(mesh, P(dp, None)),
+            NamedSharding(mesh, P()))

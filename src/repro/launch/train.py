@@ -1,0 +1,74 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch deepseek-v2-236b \
+        --smoke --steps 50 [--seq 128 --batch 4 --ckpt-dir /tmp/ckpt]
+
+--smoke runs the arch's reduced config end-to-end on this host (data
+pipeline -> grad-accum step -> AdamW -> async checkpoints -> fault-
+tolerant loop). Without --smoke it builds the FULL config's train step for
+the production mesh and compiles it (the dry-run path) — on real TPU
+slices this is where the real run would start.
+"""
+
+import argparse
+import tempfile
+import time
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config, get_smoke_config
+from repro.data.pipeline import SyntheticPipeline
+from repro.models import model as MD
+from repro.models.module import count_params, split
+from repro.optim.adamw import AdamWConfig, adamw_init, cosine_schedule
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.step import TrainConfig, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    if not args.smoke:
+        # full config: compile the production-mesh train step (dry-run)
+        from repro.launch.dryrun import run_cell, RESULTS_DIR
+        import pathlib
+        rec = run_cell(args.arch, "train_4k", False,
+                       pathlib.Path(RESULTS_DIR), force=True)
+        raise SystemExit(0 if rec.get("ok") else 1)
+
+    cfg = get_smoke_config(args.arch)
+    params, _ = split(MD.init_model(cfg, jax.random.PRNGKey(0)))
+    print(f"[train] {cfg.name}: {count_params(params)/1e6:.2f}M params")
+    ocfg = AdamWConfig(lr=args.lr)
+    opt_state = adamw_init(params, ocfg)
+    step = jax.jit(make_train_step(
+        cfg, ocfg, TrainConfig(n_micro=args.n_micro),
+        cosine_schedule(args.lr, warmup=args.steps // 10 + 1,
+                        total=args.steps)))
+    pipe = SyntheticPipeline.for_model(cfg, args.seq, args.batch)
+    ckpt = CheckpointManager(args.ckpt_dir or
+                             tempfile.mkdtemp(prefix=f"{cfg.name}_"))
+    t0 = time.time()
+    params, opt_state, log = train_loop(
+        step, params, opt_state, pipe, ckpt,
+        LoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                   log_every=max(1, args.steps // 10)))
+    losses = [e for e in log if "loss" in e]
+    print(f"[train] {args.steps} steps in {time.time()-t0:.1f}s; "
+          f"loss {losses[0]['loss']:.3f} -> {losses[-1]['loss']:.3f}; "
+          f"checkpoints: {ckpt.all_steps()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Standard attention (MHA/GQA/MQA) with optional QKV bias (Qwen1.5/2.5),
+qk-norm (Qwen3), RoPE, and a KV cache for decode.
+
+The KV cache entry here is the FETCH-heavy contrast case of the paper (§2.1):
+per token per layer it is 2 * n_kv * head_dim * 2 B — for a kv=8, d=128 GQA
+that is 4 KB vs MLA's 1.152 KB, and for MHA (kv=40) 20 KB. The predicate's
+payload_for() consumes exactly these numbers per architecture.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.module import KeyGen, param, zeros
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: Optional[int] = None     # explicit (Qwen3) or d_model/n_heads
+    qkv_bias: bool = False             # Qwen1.5/2.5
+    qk_norm: bool = False              # Qwen3
+    rope_theta: float = 10000.0
+    causal: bool = True                # False for encoder self-attn
+    use_rope: bool = True              # False for Whisper (learned pos emb)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def scale(self) -> float:
+        return 1.0 / np.sqrt(self.hd)
+
+    @property
+    def kv_bytes_token_layer(self) -> int:
+        return 2 * self.n_kv_heads * self.hd * 2    # K+V, bf16
+
+
+def init_attn(kg: KeyGen, cfg: AttnConfig, dtype=jnp.bfloat16,
+              d_kv_src: Optional[int] = None):
+    """d_kv_src: source dim for K/V (cross-attention reads encoder states)."""
+    dm, hd = cfg.d_model, cfg.hd
+    dkv = d_kv_src or dm
+    p = {
+        "q": param(kg(), (dm, cfg.n_heads, hd), ("embed", "heads", None), dtype),
+        "k": param(kg(), (dkv, cfg.n_kv_heads, hd), ("embed", "kv", None), dtype),
+        "v": param(kg(), (dkv, cfg.n_kv_heads, hd), ("embed", "kv", None), dtype),
+        "o": param(kg(), (cfg.n_heads, hd, dm), ("heads", None, "embed"), dtype),
+    }
+    if cfg.qkv_bias:
+        p["q_b"] = zeros((cfg.n_heads, hd), ("heads", None), dtype)
+        p["k_b"] = zeros((cfg.n_kv_heads, hd), ("kv", None), dtype)
+        p["v_b"] = zeros((cfg.n_kv_heads, hd), ("kv", None), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = L.init_rmsnorm(hd, dtype)
+        p["k_norm"] = L.init_rmsnorm(hd, dtype)
+    return p
+
+
+def _project(p, cfg: AttnConfig, x, x_kv, positions, kv_positions):
+    q = jnp.einsum("bsm,mhd->bshd", x, p["q"])
+    k = jnp.einsum("bsm,mhd->bshd", x_kv, p["k"])
+    v = jnp.einsum("bsm,mhd->bshd", x_kv, p["v"])
+    if "q_b" in p:
+        q, k, v = q + p["q_b"], k + p["k_b"], v + p["v_b"]
+    if "q_norm" in p:
+        q = L.rmsnorm(p["q_norm"], q)
+        k = L.rmsnorm(p["k_norm"], k)
+    if cfg.use_rope:
+        qc, qs = L.rope_cos_sin(positions, cfg.hd, cfg.rope_theta)
+        q = L.apply_rope(q, qc[:, :, None], qs[:, :, None])
+        kc, ks = L.rope_cos_sin(kv_positions, cfg.hd, cfg.rope_theta)
+        k = L.apply_rope(k, kc[:, :, None], ks[:, :, None])
+    return q, k, v
+
+
+def _sdpa(cfg: AttnConfig, q, k, v, mask):
+    """q (B,Sq,H,d), k/v (B,Sk,Hkv,d). GQA: repeat kv heads by group."""
+    groups = cfg.n_heads // cfg.n_kv_heads
+    B, Sq, H, d = q.shape
+    qg = q.reshape(B, Sq, cfg.n_kv_heads, groups, d)
+    # mixed-precision dots (bf16 K/V operands, f32 accumulate): explicit
+    # f32 upcasts make XLA materialize f32 copies of the whole KV cache
+    # around the layer scan (EXPERIMENTS.md §Perf P2)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * cfg.scale
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, H, d).astype(q.dtype)
+
+
+def attention(p, cfg: AttnConfig, x, positions, x_kv=None, kv_positions=None,
+              mask=None):
+    """Full-sequence form (train / prefill / encoder / cross-attn).
+
+    Returns (out, (k, v)) — the cache entries, so prefill fills the KV store
+    in the same pass."""
+    x_kv = x if x_kv is None else x_kv
+    kv_positions = positions if kv_positions is None else kv_positions
+    q, k, v = _project(p, cfg, x, x_kv, positions, kv_positions)
+    Sq, Sk = q.shape[1], k.shape[1]
+    if cfg.causal:
+        causal = jnp.tril(jnp.ones((Sq, Sk), bool), Sk - Sq)[None]
+        mask = causal if mask is None else (mask & causal)
+    out = _sdpa(cfg, q, k, v, mask)
+    out = jnp.einsum("bshd,hdm->bsm", out, p["o"])
+    return out, (k, v)
+
+
+def decode_step(p, cfg: AttnConfig, x, kv_cache, positions, cache_len=None):
+    """One-token decode against a (B, S, Hkv, d) K/V cache.
+
+    kv_cache: (k, v); cache_len: valid prefix length (static cache shape).
+    Returns (out (B,1,D), new (k,v) entry (B,1,Hkv,d))."""
+    k_cache, v_cache = kv_cache
+    q, k_new, v_new = _project(p, cfg, x, x, positions, positions)
+    k = jnp.concatenate([k_cache, k_new], axis=1)
+    v = jnp.concatenate([v_cache, v_new], axis=1)
+    S = k.shape[1]
+    if cache_len is not None:
+        valid = (jnp.arange(S)[None] < cache_len[:, None]) | \
+                (jnp.arange(S)[None] == S - 1)      # (B, S)
+        mask = valid[:, None, :]                    # (B, Sq=1, Sk=S)
+    else:
+        mask = None
+    out = _sdpa(cfg, q, k, v, mask)
+    out = jnp.einsum("bshd,hdm->bsm", out, p["o"])
+    return out, (k_new, v_new)

@@ -1,0 +1,165 @@
+"""Shared layers: norms, MLPs (SwiGLU / squared-ReLU / GELU), embeddings, RoPE.
+
+Logical axis names used on params (mapped to mesh axes by
+repro.distributed.sharding):
+    "embed"  : d_model            -> fsdp ("data") shard
+    "mlp"    : d_ff               -> "model" shard
+    "heads"  : flattened head dim -> "model" shard
+    "kv"     : flattened kv dim   -> "model" if divisible else replicated
+    "vocab"  : vocabulary         -> "model" shard
+    "expert" : MoE expert dim     -> "model" shard (expert parallelism)
+    "layer"  : scan-stacked layer dim -> never sharded
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.module import KeyGen, Param, ones, param, zeros
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.bfloat16):
+    return {"scale": ones((d,), ("embed",), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d: int, dtype=jnp.bfloat16):
+    return {"scale": ones((d,), ("embed",), dtype),
+            "bias": zeros((d,), ("embed",), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = x * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Dense / MLP
+# ---------------------------------------------------------------------------
+
+def init_dense(kg: KeyGen, d_in: int, d_out: int, axes, bias: bool = False,
+               dtype=jnp.bfloat16):
+    p = {"w": param(kg(), (d_in, d_out), axes, dtype)}
+    if bias:
+        p["b"] = zeros((d_out,), (axes[1],), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_mlp(kg: KeyGen, d_model: int, d_ff: int, kind: str = "swiglu",
+             dtype=jnp.bfloat16):
+    """kind: swiglu (gate+up+down) | squared_relu (up+down) | gelu (up+down).
+
+    `kind` is static config — pass the same value to mlp(); it is not stored
+    in the param tree (param trees hold arrays only)."""
+    p = {}
+    if kind == "swiglu":
+        p["gate"] = init_dense(kg, d_model, d_ff, ("embed", "mlp"), dtype=dtype)
+        p["up"] = init_dense(kg, d_model, d_ff, ("embed", "mlp"), dtype=dtype)
+    else:
+        p["up"] = init_dense(kg, d_model, d_ff, ("embed", "mlp"),
+                             bias=(kind == "gelu"), dtype=dtype)
+    p["down"] = init_dense(kg, d_ff, d_model, ("mlp", "embed"),
+                           bias=(kind == "gelu"), dtype=dtype)
+    return p
+
+
+def mlp(p, x, kind: str = "swiglu"):
+    if kind == "swiglu":
+        h = jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x)
+    elif kind == "squared_relu":
+        h = jnp.square(jax.nn.relu(dense(p["up"], x)))
+    elif kind == "gelu":
+        h = jax.nn.gelu(dense(p["up"], x), approximate=True)
+    else:
+        raise ValueError(kind)
+    return dense(p["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def init_embed(kg: KeyGen, vocab: int, d_model: int, dtype=jnp.bfloat16):
+    return {"table": param(kg(), (vocab, d_model), ("vocab", "embed"), dtype,
+                           scale=1.0)}
+
+
+def embed(p, tokens):
+    # apply fns receive plain value trees (post module.split()).
+    return p["table"][tokens]
+
+
+def unembed(p, x):
+    # tied head: the table is unit-scale for the input lookup, so the head
+    # side is scaled 1/sqrt(d) to keep initial logits O(1) (initial CE ~
+    # ln V instead of ~sqrt(d) x ln V)
+    d = x.shape[-1]
+    return (x @ p["table"].T) * (1.0 / np.sqrt(d))
+
+
+# ---------------------------------------------------------------------------
+# RoPE (NeoX half-split pairing). rope(p + delta) = R(delta) . rope(p)
+# per frequency pair — the composition property the FETCH delta-rotation
+# splice (paper §2.2) relies on.
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int,
+                 theta: float = 10000.0):
+    """positions (...,) -> cos/sin (..., head_dim/2) in f32."""
+    freqs = jnp.asarray(rope_freqs(head_dim, theta), jnp.float32)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., head_dim); cos/sin broadcastable (..., head_dim/2)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def delta_rotate(x: jax.Array, delta: jax.Array | int, head_dim: int,
+                 theta: float = 10000.0) -> jax.Array:
+    """Re-home a RoPE-encoded band from cached position p to p + delta.
+
+    This is the FETCH splice's per-layer hot-spot (paper §2.2): a purely
+    positional rotation, independent of the token's original position —
+    which is what makes the splice flat in chunk size.
+    """
+    cos, sin = rope_cos_sin(jnp.asarray(delta), head_dim, theta)
+    return apply_rope(x, cos, sin)

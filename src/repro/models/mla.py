@@ -1,0 +1,203 @@
+"""Multi-head Latent Attention (DeepSeek-V2 family) — the paper's home regime.
+
+Two execution forms over one parameterization:
+
+* train/prefill form: decompress c^KV -> per-head K/V, standard attention.
+* absorbed decode form: fold W_uk into the query ("absorbed" q, width
+  d_qk = kv_lora_rank + rope_dim = 576), attend directly against the latent
+  cache, fold W_uv into the output. The absorbed query row IS the routed
+  wire object of the paper (§2.1: "a routed query row and a cached token are
+  the same d_qk-wide object").
+
+The latent cache entry per token is [c_kv (512) | k_rope (64)]: the k_rope
+band is the only position-dependent part — the delta-rotation splice
+(core/splice.py, kernels/delta_rotate) re-homes exactly that band.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.merge import Partial, partial_from_logits
+from repro.models import layers as L
+from repro.models.module import KeyGen, param
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int = 2048
+    n_heads: int = 16
+    kv_lora_rank: int = 512          # d_c — latent value/nope-key width
+    q_lora_rank: Optional[int] = None  # None => direct q projection (V2-Lite)
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+
+    @property
+    def d_qk(self) -> int:           # absorbed query row width (576 for V2)
+        return self.kv_lora_rank + self.qk_rope_head_dim
+
+    @property
+    def qk_head_dim(self) -> int:
+        return self.qk_nope_head_dim + self.qk_rope_head_dim
+
+    @property
+    def scale(self) -> float:
+        return 1.0 / np.sqrt(self.qk_head_dim)
+
+    @property
+    def cache_width(self) -> int:    # latent cache entry bytes/2 (bf16)
+        return self.kv_lora_rank + self.qk_rope_head_dim
+
+
+def init_mla(kg: KeyGen, cfg: MLAConfig, dtype=jnp.bfloat16):
+    h, dm = cfg.n_heads, cfg.d_model
+    p = {}
+    if cfg.q_lora_rank:
+        p["q_down"] = param(kg(), (dm, cfg.q_lora_rank), ("embed", None), dtype)
+        p["q_norm"] = L.init_rmsnorm(cfg.q_lora_rank, dtype)
+        p["q_up"] = param(kg(), (cfg.q_lora_rank, h, cfg.qk_head_dim),
+                          (None, "heads", None), dtype)
+    else:
+        p["q_proj"] = param(kg(), (dm, h, cfg.qk_head_dim),
+                            ("embed", "heads", None), dtype)
+    # Latent down-projection: c_kv plus the shared decoupled-rope key band.
+    p["kv_down"] = param(kg(), (dm, cfg.kv_lora_rank + cfg.qk_rope_head_dim),
+                         ("embed", None), dtype)
+    p["kv_norm"] = L.init_rmsnorm(cfg.kv_lora_rank, dtype)
+    p["k_up"] = param(kg(), (cfg.kv_lora_rank, h, cfg.qk_nope_head_dim),
+                      (None, "heads", None), dtype)
+    p["v_up"] = param(kg(), (cfg.kv_lora_rank, h, cfg.v_head_dim),
+                      (None, "heads", None), dtype)
+    p["o_proj"] = param(kg(), (h, cfg.v_head_dim, dm),
+                        ("heads", None, "embed"), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Shared projections
+# ---------------------------------------------------------------------------
+
+def project_q(p, cfg: MLAConfig, x, positions):
+    """x (B, S, D) -> q_nope (B, S, H, dn), q_rope (B, S, H, dr) (rotated)."""
+    if "q_down" in p:
+        qc = L.rmsnorm(p["q_norm"], x @ p["q_down"])
+        q = jnp.einsum("bsc,chd->bshd", qc, p["q_up"])
+    else:
+        q = jnp.einsum("bsm,mhd->bshd", x, p["q_proj"])
+    q_nope = q[..., :cfg.qk_nope_head_dim]
+    q_rope = q[..., cfg.qk_nope_head_dim:]
+    cos, sin = L.rope_cos_sin(positions, cfg.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = L.apply_rope(q_rope, cos[:, :, None, :], sin[:, :, None, :])
+    return q_nope, q_rope
+
+
+def latent_cache_entries(p, cfg: MLAConfig, x, positions):
+    """x (B, S, D) -> c^KV entries (B, S, d_qk): [c_kv | rotated k_rope].
+
+    This is the canonical, position-invariant-modulo-rope-band cache object
+    the paper's chunk store partitions across instances.
+    """
+    kv = x @ p["kv_down"]
+    c_kv = L.rmsnorm(p["kv_norm"], kv[..., :cfg.kv_lora_rank])
+    k_rope = kv[..., cfg.kv_lora_rank:]
+    cos, sin = L.rope_cos_sin(positions, cfg.qk_rope_head_dim, cfg.rope_theta)
+    k_rope = L.apply_rope(k_rope, cos, sin)
+    return jnp.concatenate([c_kv, k_rope], axis=-1)
+
+
+def absorb_query(p, cfg: MLAConfig, q_nope, q_rope):
+    """Fold W_uk into q: (B, S, H, dn) -> absorbed q (B, S, H, d_qk=576).
+
+    The result is the paper's 1152-byte wire row (bf16)."""
+    q_abs = jnp.einsum("bshd,chd->bshc", q_nope, p["k_up"])
+    return jnp.concatenate([q_abs, q_rope], axis=-1)
+
+
+def unabsorb_output(p, cfg: MLAConfig, o_latent):
+    """Latent partial output (B, S, H, d_c) -> model output (B, S, D):
+    fold W_uv then o_proj."""
+    o = jnp.einsum("bshc,chd->bshd", o_latent, p["v_up"])
+    return jnp.einsum("bshd,hdm->bsm", o, p["o_proj"])
+
+
+# ---------------------------------------------------------------------------
+# Absorbed partial attention — the holder-side compute of ROUTE (§6.3).
+# ---------------------------------------------------------------------------
+
+def absorbed_partial(cfg: MLAConfig, q_abs, ckv, mask=None) -> Partial:
+    """q_abs (..., H, d_qk) x ckv (S, d_qk) -> Partial over the resident set.
+
+    Pure-jnp oracle; the Pallas kernel (kernels/mla_decode) computes the same.
+
+    Mixed-precision dots (bf16 operands, f32 accumulate via
+    preferred_element_type) — an explicit .astype(f32) on ckv makes XLA
+    materialize an f32 copy of the WHOLE cache stack around the layer scan
+    (measured: 134 GB/step on deepseek decode_32k — EXPERIMENTS.md §Perf
+    P2). The MXU natively consumes bf16 with f32 accumulation.
+    """
+    logits = jnp.einsum("...hc,sc->...hs", q_abs, ckv,
+                        preferred_element_type=jnp.float32) * cfg.scale
+    values = ckv[:, :cfg.kv_lora_rank]
+    if mask is not None:
+        if mask.ndim < logits.ndim:   # (S,)-style residency masks
+            mask = mask.reshape((1,) * (logits.ndim - mask.ndim) + mask.shape)
+        return partial_from_logits(logits, values, mask)
+    return partial_from_logits(logits, values)
+
+
+def absorbed_decode(p, cfg: MLAConfig, x, ckv_cache, positions, *,
+                    partial_fn=None):
+    """Single decode step in absorbed form.
+
+    x (B, 1, D); ckv_cache (B, S, d_qk); positions (B, 1) absolute position of
+    the new token. Returns (out (B, 1, D), new_entry (B, 1, d_qk)).
+    partial_fn overrides the attention inner op (e.g. the Pallas kernel)."""
+    q_nope, q_rope = project_q(p, cfg, x, positions)
+    q_abs = absorb_query(p, cfg, q_nope, q_rope)          # (B, 1, H, 576)
+    new_entry = latent_cache_entries(p, cfg, x, positions)  # (B, 1, 576)
+    full = jnp.concatenate([ckv_cache, new_entry], axis=1)  # (B, S+1, 576)
+    fn = partial_fn or (lambda q, c: jax.vmap(
+        lambda qb, cb: absorbed_partial(cfg, qb, cb))(q, c))
+    part = fn(q_abs, full)                                 # Partial over cache
+    out = unabsorb_output(p, cfg, part.o[..., :cfg.kv_lora_rank].astype(x.dtype))
+    return out, new_entry
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill form (decompressed, causal).
+# ---------------------------------------------------------------------------
+
+def mla_attention(p, cfg: MLAConfig, x, positions, mask=None):
+    """Causal self-attention, train form. x (B, S, D) -> (B, S, D).
+
+    Also returns the latent cache entries so prefill fills the c^KV store in
+    the same pass (prefill == train-forward + cache write)."""
+    B, S, _ = x.shape
+    q_nope, q_rope = project_q(p, cfg, x, positions)
+    entries = latent_cache_entries(p, cfg, x, positions)   # (B, S, 576)
+    c_kv = entries[..., :cfg.kv_lora_rank]
+    k_rope = entries[..., cfg.kv_lora_rank:]
+    k_nope = jnp.einsum("bsc,chd->bshd", c_kv, p["k_up"])
+    v = jnp.einsum("bsc,chd->bshd", c_kv, p["v_up"])
+    # logits = q_nope.k_nope + q_rope.k_rope (k_rope shared across heads);
+    # mixed-precision dots, f32 accumulate (§Perf P2)
+    logits = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * cfg.scale
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    if mask is not None:
+        causal = causal & mask
+    logits = jnp.where(causal[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", probs, v,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("bshd,hdm->bsm", o, p["o_proj"])
+    return out, entries

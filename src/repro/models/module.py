@@ -1,0 +1,109 @@
+"""Minimal module system: params are pytrees of Param(value, logical_axes).
+
+No flax/haiku on this box; this keeps full control of sharding. init_*
+functions return trees with Param leaves; split() separates them into a value
+tree (fed to apply fns / pjit) and a logical-axes tree (mapped to mesh
+PartitionSpecs by repro.distributed.sharding).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+class Param:
+    """A parameter leaf: array value + static logical-axes metadata.
+
+    Registered pytree with `axes` as aux data so vmap/scan/eval_shape treat
+    the value as the only child (strings never become leaves)."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+    def __repr__(self):
+        shape = getattr(self.value, "shape", None)
+        return f"Param(shape={shape}, axes={self.axes})"
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split(tree):
+    """(params_with_axes) -> (values, axes)."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def param(key, shape, axes, dtype=jnp.bfloat16, scale: Optional[float] = None,
+          abstract: bool = False) -> Param:
+    """Truncated-normal init with 1/sqrt(fan_in) default scale."""
+    assert len(axes) == len(shape), (shape, axes)
+    if abstract:
+        return Param(jax.ShapeDtypeStruct(tuple(shape), dtype), tuple(axes))
+    if scale is None:
+        fan_in = shape[0] if len(shape) > 1 else shape[-1]
+        scale = 1.0 / np.sqrt(max(1, fan_in))
+    v = scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return Param(v.astype(dtype), tuple(axes))
+
+
+def zeros(shape, axes, dtype=jnp.bfloat16, abstract: bool = False) -> Param:
+    if abstract:
+        return Param(jax.ShapeDtypeStruct(tuple(shape), dtype), tuple(axes))
+    return Param(jnp.zeros(shape, dtype), tuple(axes))
+
+
+def ones(shape, axes, dtype=jnp.bfloat16, abstract: bool = False) -> Param:
+    if abstract:
+        return Param(jax.ShapeDtypeStruct(tuple(shape), dtype), tuple(axes))
+    return Param(jnp.ones(shape, dtype), tuple(axes))
+
+
+class KeyGen:
+    """Splits a PRNG key on demand; passes None through in abstract mode."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        if self._key is None:
+            return None
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def count_params(values_tree) -> int:
+    leaves = jax.tree.leaves(values_tree)
+    return int(sum(np.prod(l.shape) for l in leaves))
+
+
+def init_stacked(key, n: int, init_fn):
+    """Stack n independently-initialized copies of init_fn(kg) along a
+    leading 'layer' axis (scan-over-layers layout)."""
+    keys = jax.random.split(key, n)
+    stacked = jax.vmap(lambda k: init_fn(KeyGen(k)))(keys)
+    return jax.tree.map(lambda p: Param(p.value, ("layer",) + p.axes),
+                        stacked, is_leaf=is_param)
+
+
+def abstract_init(init_fn):
+    """Run an init function without allocating (ShapeDtypeStruct leaves) —
+    what the 512-device dry-run feeds to .lower()."""
+    return jax.eval_shape(init_fn)

@@ -1,0 +1,214 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Train/prefill form: the chunked SSD algorithm — intra-chunk quadratic
+("attention-like") term + inter-chunk recurrence over per-chunk states;
+O(S * Q) compute for chunk size Q, sub-quadratic in S (this is why the
+SSM/hybrid archs run the long_500k shape the full-attention archs skip).
+
+Decode form: the O(1) recurrence  h_t = a_t h_{t-1} + dt_t * B_t x_t^T,
+y_t = C_t h_t — the "cache" is a fixed-size state (H, hd, N), which is why
+the paper's per-chunk redistribution question is inapplicable to pure SSMs
+(DESIGN.md §4): there is nothing chunk-shaped to route to; state handoff is
+a one-shot fixed-size FETCH.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.module import KeyGen, Param, param, zeros
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 128          # N
+    head_dim: int = 64          # P
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 64             # SSD chunk length Q
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_mamba2(kg: KeyGen, cfg: Mamba2Config, dtype=jnp.bfloat16):
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    # in_proj emits [z (di) | x (di) | B (n) | C (n) | dt (h)]
+    d_in_proj = 2 * di + 2 * n + h
+    p = {
+        "in_proj": param(kg(), (cfg.d_model, d_in_proj), ("embed", "mlp"), dtype),
+        "conv_w": param(kg(), (cfg.d_conv, di + 2 * n), (None, "mlp"), dtype,
+                        scale=0.5),
+        "conv_b": zeros((di + 2 * n,), ("mlp",), dtype),
+        "a_log": Param(jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+                       ("heads",)),
+        "dt_bias": zeros((h,), ("heads",), jnp.float32),
+        "d_skip": Param(jnp.ones((h,), jnp.float32), ("heads",)),
+        "norm": L.init_rmsnorm(di, dtype),
+        "out_proj": param(kg(), (di, cfg.d_model), ("mlp", "embed"), dtype),
+    }
+    return p
+
+
+def _split_proj(cfg: Mamba2Config, zxbcdt):
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc, conv_state=None):
+    """Depthwise causal conv over the sequence axis. xbc (B, S, C).
+    conv_state (B, d_conv-1, C) carries the left context for decode."""
+    w = p["conv_w"].astype(jnp.float32)               # (K, C)
+    K = w.shape[0]
+    x = xbc.astype(jnp.float32)
+    if conv_state is None:
+        pad = jnp.zeros_like(x[:, : K - 1])
+    else:
+        pad = conv_state.astype(jnp.float32)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+K-1, C)
+    out = sum(w[i] * xp[:, i: i + x.shape[1]] for i in range(K))
+    out = jax.nn.silu(out + p["conv_b"].astype(jnp.float32))
+    new_state = xp[:, -(K - 1):]
+    return out.astype(xbc.dtype), new_state.astype(xbc.dtype)
+
+
+def ssd_chunked(cfg: Mamba2Config, x, dt, A, B, C, h0=None,
+                use_kernel: bool = False):
+    """Chunked SSD scan.
+
+    x (b, s, h, p); dt (b, s, h) (post-softplus); A (h) negative decay;
+    B, C (b, s, n). Returns (y (b, s, h, p), h_final (b, h, p, n)).
+
+    use_kernel=True routes the intra-chunk quadratic term through the
+    fused Pallas kernel (kernels/ssd_chunk) — no (Q,Q,h) HBM
+    intermediates; the inter-chunk recurrence stays a lax.scan
+    (EXPERIMENTS.md §Perf M1).
+    """
+    b, s, h, pdim = x.shape
+    n = B.shape[-1]
+    Q = cfg.chunk
+    assert s % Q == 0, (s, Q)
+    nc = s // Q
+    # reshape to chunks
+    xc = x.reshape(b, nc, Q, h, pdim)
+    dtc = dt.reshape(b, nc, Q, h)
+    Bc = B.reshape(b, nc, Q, n)
+    Cc = C.reshape(b, nc, Q, n)
+
+    if use_kernel:
+        from repro.kernels.ssd_chunk import ssd_intra_chunk
+        hb = min(8, h)
+        while h % hb:
+            hb -= 1
+        y_intra, states, cum = ssd_intra_chunk(
+            xc, dtc.astype(jnp.float32), A.astype(jnp.float32),
+            Bc, Cc, hb=hb)
+        seg_sum = cum[:, :, -1]
+    else:
+        da = dtc * A[None, None, None]                 # log-decay per step
+        cum = jnp.cumsum(da, axis=2)                   # (b, nc, Q, h)
+        seg_sum = cum[:, :, -1]                        # total chunk decay
+
+        # --- intra-chunk (quadratic within Q): y_intra[t] =
+        #     sum_{u<=t} C_t.B_u exp(cum_t - cum_u) dt_u x_u
+        # mask the exponent BEFORE exp: the t<u entries have positive
+        # exponents that overflow, and a post-exp where() would leak NaN
+        # into the gradient.
+        expo = cum[:, :, :, None] - cum[:, :, None]         # (b,nc,Q,Q,h)
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        expo = jnp.where(causal[None, None, :, :, None], expo, -jnp.inf)
+        Lmat = jnp.exp(expo)
+        CB = jnp.einsum("bcqn,bckn->bcqk", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))
+        G = CB[..., None] * Lmat                            # (b,nc,Q,Q,h)
+        y_intra = jnp.einsum("bcqkh,bckh,bckhp->bcqhp", G,
+                             dtc.astype(jnp.float32),
+                             xc.astype(jnp.float32))
+
+        # --- per-chunk output state:
+        #     S_c = sum_u exp(seg - cum_u) dt_u B_u x_u^T
+        decay_out = jnp.exp(seg_sum[:, :, None] - cum)      # (b,nc,Q,h)
+        states = jnp.einsum("bckh,bckh,bckn,bckhp->bchpn",
+                            decay_out, dtc.astype(jnp.float32),
+                            Bc.astype(jnp.float32), xc.astype(jnp.float32))
+
+    # --- inter-chunk recurrence over chunk states
+    def step(hprev, inp):
+        st, seg = inp                                      # (b,h,p,n), (b,h)
+        hnew = hprev * jnp.exp(seg)[:, :, None, None] + st
+        return hnew, hprev                                 # emit state BEFORE chunk
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, pdim, n), jnp.float32)
+    states_t = jnp.moveaxis(states, 1, 0)                  # (nc, b, h, p, n)
+    segs_t = jnp.moveaxis(seg_sum, 1, 0)                   # (nc, b, h)
+    h_final, h_prefix = lax.scan(step, h0, (states_t, segs_t))
+    h_prefix = jnp.moveaxis(h_prefix, 0, 1)                # (b, nc, h, p, n)
+
+    # --- inter-chunk contribution: y_inter[t] = C_t . (exp(cum_t) h_prefix)
+    decay_in = jnp.exp(cum)                                # (b,nc,Q,h)
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                         Cc.astype(jnp.float32), h_prefix, decay_in)
+    y = (y_intra + y_inter).reshape(b, s, h, pdim)
+    return y, h_final
+
+
+def mamba2_forward(p, cfg: Mamba2Config, x, h0=None, conv_state=None):
+    """Full-sequence form. x (B, S, D) -> (y (B, S, D), (h_final, conv_state)).
+    """
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc, conv_state = _causal_conv(p, xbc, conv_state)
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    xs = xbc[..., :di].reshape(*x.shape[:2], h, cfg.head_dim)
+    B = xbc[..., di:di + n]
+    C = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    y, h_final = ssd_chunked(cfg, xs, dt, A, B, C, h0)
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], di).astype(x.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"], (h_final, conv_state)
+
+
+def mamba2_decode(p, cfg: Mamba2Config, x, state):
+    """One-token recurrence. x (B, 1, D); state = (h (B,H,P,N), conv_state).
+    Returns (y (B, 1, D), new state). The entire 'cache' is this fixed-size
+    state — the SSM arch's answer to the paper's transport question."""
+    h_prev, conv_state = state
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc, conv_state = _causal_conv(p, xbc, conv_state)
+    di, n, hh = cfg.d_inner, cfg.d_state, cfg.n_heads
+    xs = xbc[..., :di].reshape(x.shape[0], 1, hh, cfg.head_dim)
+    B = xbc[..., di:di + n]
+    C = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,1,H)
+    A = -jnp.exp(p["a_log"])
+    a_t = jnp.exp(dt[:, 0] * A[None])                  # (B, H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0].astype(jnp.float32),
+                     B[:, 0].astype(jnp.float32),
+                     xs[:, 0].astype(jnp.float32))
+    h_new = h_prev * a_t[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", C[:, 0].astype(jnp.float32), h_new)
+    y = y + p["d_skip"][None, :, None] * xs[:, 0].astype(jnp.float32)
+    y = y.reshape(x.shape[0], 1, di).astype(x.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"], (h_new, conv_state)

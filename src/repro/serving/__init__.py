@@ -1,0 +1,2 @@
+from repro.serving.engine import (EngineConfig, ServingEngine, Instance,
+                                  Request)

@@ -1,0 +1,234 @@
+"""Predicate-driven serving engine: the layer that CONSUMES the paper's
+cost model (§5: "the serving system that consumes the rule").
+
+Responsibilities per decode step:
+  * residency lookup (chunk_store) per (request, chunk);
+  * transport choice per the closed-form predicate (core.predicate) with
+    the fabric picked from the instance topology (intra-pod ICI vs
+    cross-pod DCN — probe latency, not peak bandwidth, §5.5);
+  * cross-request dispatcher batching: all queries routed to one holder in
+    a step ship as ONE batched dispatch (the §5.3 reduction);
+  * per-holder fan-in cap at the N~8 compute elbow (§6.3): beyond it,
+    schedule a replica (amortised FETCH) and rebalance;
+  * straggler mitigation: a backup dispatch fires to a replica holder when
+    a holder's simulated latency exceeds the p99 deadline;
+  * fault handling: drop_holder re-homes chunks (replica promotion) and
+    orphaned chunks re-enter via LOCAL (re-prefill).
+
+The transport itself can run in two modes: 'sim' (latency bookkeeping from
+the cost model — used by benchmarks) and 'exec' (actual JAX math via
+core.routing on a single host — used by correctness tests/examples).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import defaultdict
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import constants as C
+from repro.core import cost_model as cm
+from repro.core import predicate as P
+from repro.core.chunk_store import ChunkStore
+from repro.core.constants import Fabric
+
+
+@dataclasses.dataclass
+class Instance:
+    idx: int
+    pod: int = 0
+    # simulated holder-side service-time scale (stragglers: > 1)
+    slowdown: float = 1.0
+    alive: bool = True
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    home: int                      # requester instance
+    chunk_ids: List[str]
+    m_q: int = 1                   # query rows per chunk this step
+    expected_reuse_steps: int = 1
+    k_selected: Optional[int] = None
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    fanin_cap: int = C.HOLDER_COMPUTE_ELBOW_N      # §6.3 elbow
+    staging_streams: int = C.STAGING_STREAMS_ELBOW_K  # §6.2 policy constant
+    straggler_p99_factor: float = 3.0              # backup fire threshold
+    intra_pod_fabric: str = "tpu_ici"
+    cross_pod_fabric: str = "tpu_dcn"
+    payload: cm.Payload = cm.MLA_PAYLOAD
+
+
+@dataclasses.dataclass
+class DispatchRecord:
+    step: int
+    holder: int
+    primitive: str
+    chunk_id: str
+    n_requesters: int
+    m_q_total: int
+    est_cost_s: float
+    backup: bool = False
+
+
+class ServingEngine:
+    def __init__(self, n_instances: int, pool_tokens: int,
+                 cfg: EngineConfig = EngineConfig(),
+                 instances_per_pod: int = 0):
+        self.cfg = cfg
+        self.store = ChunkStore(n_instances, pool_tokens)
+        ipp = instances_per_pod or n_instances
+        self.instances = [Instance(i, pod=i // ipp)
+                          for i in range(n_instances)]
+        self.log: List[DispatchRecord] = []
+        self.step_idx = 0
+
+    # -- topology -------------------------------------------------------------
+
+    def fabric_between(self, a: int, b: int) -> Fabric:
+        """Choose by topology; the probe, not peak BW, is what matters at
+        decode (§5.5)."""
+        if self.instances[a].pod == self.instances[b].pod:
+            return C.fabric(self.cfg.intra_pod_fabric)
+        return C.fabric(self.cfg.cross_pod_fabric)
+
+    # -- admission ------------------------------------------------------------
+
+    def register_chunk(self, chunk_id: str, holder: int, length: int,
+                       position_base: int = 0):
+        return self.store.register(chunk_id, holder, length, position_base)
+
+    # -- scheduling one decode step --------------------------------------------
+
+    def schedule_step(self, requests: List[Request]) -> List[DispatchRecord]:
+        """Plan all transports for one global decode step: per-chunk
+        predicate, cross-request batching per holder, fan-in capping,
+        replica spawning."""
+        self.step_idx += 1
+        # group (holder, chunk) -> [(request, decision)]
+        groups: Dict[Tuple[int, str], List[Tuple[Request, P.Decision]]] = \
+            defaultdict(list)
+        records: List[DispatchRecord] = []
+
+        for rq in requests:
+            for cid in rq.chunk_ids:
+                chunk = self.store.lookup(cid)
+                holders = [h for h in self.store.holders_of(cid)
+                           if self.instances[h].alive]
+                if not holders:
+                    # orphaned: LOCAL re-prefill, then re-home the chunk to
+                    # the requester so subsequent steps serve it normally
+                    records.append(DispatchRecord(
+                        self.step_idx, rq.home, "local", cid, 1, rq.m_q,
+                        cm.t_local(chunk.length)))
+                    self.store.allocate(rq.home, chunk.length)
+                    chunk.holder = rq.home
+                    continue
+                # nearest live holder by fabric probe
+                holder = min(holders, key=lambda h: self.fabric_between(
+                    rq.home, h).t_probe_s if h != rq.home else 0.0)
+                if holder == rq.home:
+                    continue          # resident: free local attention
+                dec = P.decide(P.Request(
+                    m_q=rq.m_q, c_t=chunk.length,
+                    fabric=self.fabric_between(rq.home, holder),
+                    payload=self.cfg.payload,
+                    expected_reuse_steps=rq.expected_reuse_steps,
+                    k_selected=rq.k_selected,
+                    n_holders=len(holders)))
+                groups[(holder, cid)].append((rq, dec))
+
+        # cross-request dispatcher batching + fan-in capping
+        for (holder, cid), entries in groups.items():
+            primitive = self._majority_primitive(entries)
+            n_req = len(entries)
+            if primitive == "route" and n_req > self.cfg.fanin_cap:
+                # beyond the elbow: spawn a replica (amortised FETCH) for
+                # the overflow and rebalance (§6.3 replication boundary)
+                overflow = entries[self.cfg.fanin_cap:]
+                entries = entries[: self.cfg.fanin_cap]
+                replica = self._spawn_replica(cid, overflow)
+                records.append(replica)
+                n_req = len(entries)
+            m_q_total = sum(rq.m_q for rq, _ in entries)
+            fab = self.fabric_between(entries[0][0].home, holder)
+            if primitive == "route":
+                cost = cm.t_route(fab, m_q_total, self.cfg.payload)
+            elif primitive == "fetch":
+                cost = cm.t_fetch(fab, self.store.lookup(cid).length,
+                                  self.cfg.payload)
+            else:
+                cost = cm.t_local(self.store.lookup(cid).length)
+            cost *= self.instances[holder].slowdown
+            rec = DispatchRecord(self.step_idx, holder, primitive, cid,
+                                 n_req, m_q_total, cost)
+            records.append(rec)
+            # straggler mitigation: fire a backup to a replica if the
+            # holder's (simulated) latency blows the p99 deadline
+            nominal = cost / self.instances[holder].slowdown
+            if (self.instances[holder].slowdown
+                    >= self.cfg.straggler_p99_factor):
+                alt = [h for h in self.store.holders_of(cid)
+                       if h != holder and self.instances[h].alive]
+                if alt:
+                    fab2 = self.fabric_between(entries[0][0].home, alt[0])
+                    records.append(DispatchRecord(
+                        self.step_idx, alt[0], primitive, cid, n_req,
+                        m_q_total,
+                        cm.t_route(fab2, m_q_total, self.cfg.payload),
+                        backup=True))
+        self.log.extend(records)
+        return records
+
+    def _majority_primitive(self, entries) -> str:
+        votes = defaultdict(int)
+        for _, dec in entries:
+            votes[dec.primitive.value] += 1
+        return max(votes, key=votes.get)
+
+    def _spawn_replica(self, cid: str, overflow) -> DispatchRecord:
+        """Amortised FETCH: replicate the chunk onto the requester instance
+        with the most overflow demand."""
+        by_home = defaultdict(int)
+        for rq, _ in overflow:
+            by_home[rq.home] += rq.m_q
+        target = max(by_home, key=by_home.get)
+        chunk = self.store.lookup(cid)
+        fab = self.fabric_between(target, chunk.holder)
+        self.store.add_replica(cid, target)
+        return DispatchRecord(self.step_idx, target, "fetch_replica", cid,
+                              len(overflow), sum(m for m in by_home.values()),
+                              cm.t_fetch(fab, chunk.length, self.cfg.payload))
+
+    # -- faults ---------------------------------------------------------------
+
+    def fail_instance(self, idx: int) -> List[str]:
+        self.instances[idx].alive = False
+        return self.store.drop_holder(idx)
+
+    def set_straggler(self, idx: int, slowdown: float):
+        self.instances[idx].slowdown = slowdown
+
+    # -- metrics ---------------------------------------------------------------
+
+    def step_latency(self, step: int) -> float:
+        """Critical-path latency of one step: max over primary dispatches,
+        where a backup caps its primary's contribution."""
+        primaries = [r for r in self.log
+                     if r.step == step and not r.backup]
+        backups = {(r.holder, r.chunk_id): r for r in self.log
+                   if r.step == step and r.backup}
+        worst = 0.0
+        for r in primaries:
+            cost = r.est_cost_s
+            for b in backups.values():
+                if b.chunk_id == r.chunk_id:
+                    cost = min(cost, b.est_cost_s)
+            worst = max(worst, cost)
+        return worst

@@ -1,0 +1,131 @@
+"""Online-softmax merge algebra (§3.2, §3.3): commutativity, zero-weight
+identity, associativity/partition-invariance — bit-level and property-based."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.merge import (Partial, merge2, merge_stacked, merge_tree,
+                              partial_from_logits)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand_partial(key, shape=(2, 4), d_v=8, scale=1.0):
+    k1, k2, k3 = jax.random.split(key, 3)
+    logits = scale * jax.random.normal(k1, shape + (16,))
+    values = jax.random.normal(k2, shape + (16, d_v))
+    return partial_from_logits(logits, values)
+
+
+def _assert_partial_close(a: Partial, b: Partial, atol=1e-6):
+    np.testing.assert_allclose(a.o, b.o, atol=atol)
+    np.testing.assert_allclose(a.l, b.l, rtol=1e-5)
+
+
+class TestMergeAlgebra:
+    def test_commutativity_bit_identical(self):
+        # §3.3: "verified in unit tests for commutativity".
+        a = _rand_partial(jax.random.PRNGKey(0))
+        b = _rand_partial(jax.random.PRNGKey(1))
+        ab, ba = merge2(a, b), merge2(b, a)
+        # merge2 is symmetric up to the addition order in wa+wb; assert
+        # bit-identical outputs (addition of two floats is commutative).
+        assert np.array_equal(np.asarray(ab.o), np.asarray(ba.o))
+        assert np.array_equal(np.asarray(ab.l), np.asarray(ba.l))
+        assert np.array_equal(np.asarray(ab.m), np.asarray(ba.m))
+
+    def test_zero_weight_identity(self):
+        # §3.3: "the zero-weight identity".
+        a = _rand_partial(jax.random.PRNGKey(2))
+        ident = Partial.identity(a.m.shape, a.o.shape[-1])
+        _assert_partial_close(merge2(a, ident), a, atol=0)
+        _assert_partial_close(merge2(ident, a), a, atol=0)
+
+    def test_identity_merge_identity(self):
+        ident = Partial.identity((3,), 4)
+        out = merge2(ident, ident)
+        assert not np.any(np.isnan(out.o))
+        assert np.all(np.asarray(out.l) == 0)
+
+    def test_merge_equals_full_softmax(self):
+        # Partition a logit row arbitrarily; merged == softmax over the whole.
+        key = jax.random.PRNGKey(3)
+        logits = jax.random.normal(key, (2, 3, 64))
+        values = jax.random.normal(jax.random.PRNGKey(4), (2, 3, 64, 8))
+        full = partial_from_logits(logits, values)
+        cuts = [0, 7, 13, 40, 64]
+        parts = [partial_from_logits(logits[..., a:b], values[..., a:b, :])
+                 for a, b in zip(cuts[:-1], cuts[1:])]
+        _assert_partial_close(merge_tree(parts), full, atol=1e-6)
+
+    def test_partition_invariance_fp32(self):
+        # §3.3: invariant to M up to 8 and to how the set is partitioned,
+        # to fp32 round-off (<= 4e-7 max-absolute).
+        key = jax.random.PRNGKey(5)
+        logits = jax.random.normal(key, (4, 512))
+        values = jax.random.normal(jax.random.PRNGKey(6), (4, 512, 16))
+        full = partial_from_logits(logits, values)
+        rng = np.random.RandomState(0)
+        for m in range(2, 9):
+            cuts = np.sort(rng.choice(np.arange(1, 512), m - 1, replace=False))
+            cuts = [0] + list(cuts) + [512]
+            parts = [partial_from_logits(logits[..., a:b], values[..., a:b, :])
+                     for a, b in zip(cuts[:-1], cuts[1:])]
+            merged = merge_tree(parts)
+            err = np.max(np.abs(np.asarray(merged.o) - np.asarray(full.o)))
+            assert err <= 4e-6, (m, err)   # fp32 round-off scale
+
+    def test_stacked_matches_tree(self):
+        parts = [_rand_partial(jax.random.PRNGKey(i)) for i in range(5)]
+        ident = Partial.identity(parts[0].m.shape, parts[0].o.shape[-1])
+        stacked = Partial(
+            o=jnp.stack([p.o for p in parts] + [ident.o]),
+            m=jnp.stack([p.m for p in parts] + [ident.m]),
+            l=jnp.stack([p.l for p in parts] + [ident.l]),
+        )
+        _assert_partial_close(merge_stacked(*stacked), merge_tree(parts),
+                              atol=1e-6)
+
+    def test_empty_shard_is_harmless(self):
+        # A holder whose resident mask is empty returns identity.
+        logits = jnp.full((2, 8), -jnp.inf)
+        values = jnp.zeros((2, 8, 4))
+        p = partial_from_logits(logits, values)
+        assert np.all(np.asarray(p.l) == 0)
+        a = _rand_partial(jax.random.PRNGKey(7), shape=(2,), d_v=4)
+        _assert_partial_close(merge2(a, p), a, atol=0)
+
+
+class TestMergeProperties:
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(2, 8),
+           st.floats(0.1, 20.0))
+    def test_partition_invariance_property(self, seed, m, scale):
+        # Property: any M-way split of any (scaled) logit set merges to the
+        # full softmax. Large scales stress the max-shift path.
+        key = jax.random.PRNGKey(seed)
+        s = 128
+        logits = scale * jax.random.normal(key, (2, s))
+        values = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, s, 4))
+        full = partial_from_logits(logits, values)
+        rng = np.random.RandomState(seed % 2**16)
+        cuts = np.sort(rng.choice(np.arange(1, s), m - 1, replace=False))
+        cuts = [0] + list(cuts) + [s]
+        parts = [partial_from_logits(logits[..., a:b], values[..., a:b, :])
+                 for a, b in zip(cuts[:-1], cuts[1:])]
+        merged = merge_tree(parts)
+        np.testing.assert_allclose(merged.o, full.o, atol=2e-5)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_merge_associativity_property(self, seed):
+        a = _rand_partial(jax.random.PRNGKey(seed))
+        b = _rand_partial(jax.random.PRNGKey(seed + 1))
+        c = _rand_partial(jax.random.PRNGKey(seed + 2))
+        left = merge2(merge2(a, b), c)
+        right = merge2(a, merge2(b, c))
+        np.testing.assert_allclose(left.o, right.o, atol=1e-5)
+        np.testing.assert_allclose(left.l, right.l, rtol=1e-5)

@@ -1,0 +1,159 @@
+"""Selection (indexer) utilities + the canonical chunk store, plus
+predicate property tests (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import constants as C
+from repro.core import cost_model as cm
+from repro.core import predicate as P
+from repro.core import selection as SEL
+from repro.core.chunk_store import ChunkStore
+from repro.models.module import KeyGen, split
+
+
+class TestSelection:
+    def test_topk_tokens_and_mask_roundtrip(self):
+        scores = jnp.asarray([[0.1, 0.9, 0.3, 0.8, 0.2, 0.7, 0.0, 0.5]])
+        idx = SEL.topk_tokens(scores, 3)
+        assert set(np.asarray(idx)[0]) == {1, 3, 5}
+        mask = SEL.selection_mask(idx, 8)
+        assert np.asarray(mask)[0].sum() == 3
+        assert all(np.asarray(mask)[0][[1, 3, 5]])
+
+    def test_topk_blocks_selects_max_blocks(self):
+        # 4 blocks of 4 tokens; blocks 1 and 3 carry the peaks
+        s = np.zeros((1, 16), np.float32)
+        s[0, 5] = 9.0
+        s[0, 14] = 8.0
+        idx = SEL.topk_blocks(jnp.asarray(s), block_tokens=4, k_blocks=2)
+        assert set(np.asarray(idx)[0]) == {1, 3}
+        mask = SEL.block_mask_to_tokens(idx, 4, 16)
+        assert np.asarray(mask)[0].sum() == 8
+
+    def test_indexer_scores_shape(self):
+        cfg = SEL.IndexerConfig(d_model=32, d_index=8)
+        params, _ = split(SEL.init_indexer(KeyGen(jax.random.PRNGKey(0)),
+                                           cfg, dtype=jnp.float32))
+        xq = jax.random.normal(jax.random.PRNGKey(1), (2, 32))
+        keys = SEL.index_keys(params, jax.random.normal(
+            jax.random.PRNGKey(2), (64, 32)))
+        scores = SEL.index_scores(params, xq, keys)
+        assert scores.shape == (2, 64)
+
+    def test_residency_split_partitions_exactly(self):
+        idx = np.asarray([3, 17, 40, 41, 63])
+        masks = SEL.residency_split(idx, [0, 16, 32, 64])
+        assert masks[0].sum() == 1 and masks[0][3]
+        assert masks[1].sum() == 1 and masks[1][1]       # 17 - 16
+        assert masks[2].sum() == 3
+        # distributed selection covers the set exactly once (§5.4)
+        assert sum(m.sum() for m in masks) == len(idx)
+
+
+class TestSelectionDecode:
+    def test_deepseek_selection_decode_path(self):
+        """The DSA-style top-k decode path (long_500k's sub-quadratic
+        attention): selection_k on the smoke config produces finite logits
+        and matches the dense path when k >= cache length."""
+        import dataclasses
+        from repro.configs import get_smoke_config
+        from repro.models import model as MD
+        cfg0 = get_smoke_config("deepseek_v2_236b")
+        params, _ = split(MD.init_model(cfg0, jax.random.PRNGKey(0)))
+        B, S = 2, 32
+        state = MD.init_decode_state(cfg0, B, S)
+        token = jnp.zeros((B, 1), jnp.int32)
+        pos = jnp.full((B, 1), S, jnp.int32)
+        # k == S+... selection over the whole cache == dense
+        cfg_sel = dataclasses.replace(cfg0, selection_k=S)
+        dense, _ = MD.decode_step(params, cfg0, state, token, pos,
+                                  jnp.int32(0))
+        sel, _ = MD.decode_step(params, cfg_sel, state, token, pos,
+                                jnp.int32(0))
+        np.testing.assert_allclose(np.asarray(sel, np.float32),
+                                   np.asarray(dense, np.float32),
+                                   atol=1e-2)
+        # small k: still finite, different result (actually sparse)
+        cfg_k4 = dataclasses.replace(cfg0, selection_k=4)
+        out, _ = MD.decode_step(params, cfg_k4, state, token, pos,
+                                jnp.int32(0))
+        assert np.all(np.isfinite(np.asarray(out, np.float32)))
+
+
+class TestChunkStore:
+    def test_register_lookup_replicate(self):
+        s = ChunkStore(4, 10_000)
+        c = s.register("doc", holder=1, length=2048)
+        assert s.holders_of("doc") == [1]
+        s.add_replica("doc", 3)
+        assert set(s.holders_of("doc")) == {1, 3}
+        assert s.resident_on("doc", 3)
+
+    def test_fork_refcount_and_release(self):
+        s = ChunkStore(4, 10_000)
+        s.register("doc", 0, 1000)
+        forks = [s.fork("doc", i % 4) for i in range(10)]
+        assert s.fan_in("doc") == 10         # the N of the §6.3 elbow
+        s.append_suffix(forks[0].fork_id, 128)
+        assert forks[0].suffix_length == 128
+        for f in forks:
+            s.release(f.fork_id)
+        assert s.fan_in("doc") == 0
+
+    def test_drop_holder_promotes_or_orphans(self):
+        s = ChunkStore(4, 10_000)
+        s.register("a", 0, 100)
+        s.register("b", 0, 100)
+        s.add_replica("a", 2)
+        orphaned = s.drop_holder(0)
+        assert orphaned == ["b"]
+        assert s.lookup("a").holder == 2
+
+    def test_pool_exhaustion_raises(self):
+        s = ChunkStore(2, 100)
+        s.register("a", 0, 80)
+        with pytest.raises(MemoryError):
+            s.register("c", 0, 50)
+
+
+class TestPredicateProperties:
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(1, 4096), st.integers(32, 8192),
+           st.sampled_from(["h100_ibgda", "h100_nvlink4", "tpu_ici",
+                            "tpu_dcn"]))
+    def test_decision_is_argmin(self, m_q, c_t, fname):
+        req = P.Request(m_q=m_q, c_t=c_t, fabric=C.fabric(fname))
+        d = P.decide(req)
+        best = min(d.costs.values())
+        assert d.costs[d.primitive] == best
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(1, 2048), st.integers(64, 4096))
+    def test_route_cost_monotone_in_mq(self, m_q, c_t):
+        fab = C.fabric("h100_ibgda")
+        t1 = cm.t_route_transport(fab, m_q)
+        t2 = cm.t_route_transport(fab, m_q + 64)
+        assert t2 > t1
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(64, 4096))
+    def test_fetch_amortisation_monotone(self, c_t):
+        fab = C.fabric("h100_ibgda")
+        costs = [P.fetch_cost(P.Request(m_q=1, c_t=c_t, fabric=fab,
+                                        expected_reuse_steps=r))
+                 for r in (1, 10, 100)]
+        assert costs[0] >= costs[1] >= costs[2]
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(1, 256), st.integers(256, 4096))
+    def test_decode_regime_always_routes(self, m_q, c_t):
+        # §5.5 rule 1 as a property: decode-shaped requests on any measured
+        # fabric pick ROUTE (one-shot, no selection, holder can compute)
+        for fname in ("h100_ibgda", "tpu_ici"):
+            d = P.decide(P.Request(m_q=m_q, c_t=c_t,
+                                   fabric=C.fabric(fname)))
+            assert d.primitive is P.Primitive.ROUTE

@@ -1,0 +1,129 @@
+"""Mamba2 SSD and MoE dispatch oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import moe as MOE
+from repro.models import ssm as S
+from repro.models.module import KeyGen, split
+
+
+class TestSSD:
+    CFG = S.Mamba2Config(d_model=64, d_state=16, head_dim=8, expand=2,
+                         chunk=8)
+
+    def _naive(self, x, dt, A, B, C):
+        b, s, h, p = x.shape
+        n = B.shape[-1]
+        hst = np.zeros((b, h, p, n), np.float32)
+        ys = []
+        for t in range(s):
+            a_t = np.exp(np.asarray(dt[:, t]) * np.asarray(A)[None])
+            upd = np.einsum("bh,bn,bhp->bhpn", np.asarray(dt[:, t]),
+                            np.asarray(B[:, t]), np.asarray(x[:, t]))
+            hst = hst * a_t[:, :, None, None] + upd
+            ys.append(np.einsum("bn,bhpn->bhp", np.asarray(C[:, t]), hst))
+        return np.stack(ys, 1), hst
+
+    def test_chunked_equals_naive(self):
+        cfg = self.CFG
+        b, s, h, p, n = 2, 32, cfg.n_heads, cfg.head_dim, cfg.d_state
+        k = jax.random.PRNGKey(0)
+        ks = jax.random.split(k, 5)
+        x = jax.random.normal(ks[0], (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+        B = jax.random.normal(ks[3], (b, s, n))
+        C = jax.random.normal(ks[4], (b, s, n))
+        y, hf = S.ssd_chunked(cfg, x, dt, A, B, C)
+        y_ref, h_ref = self._naive(x, dt, A, B, C)
+        np.testing.assert_allclose(np.asarray(y), y_ref, atol=2e-4, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(hf), h_ref, atol=2e-4, rtol=1e-3)
+
+    def test_decode_matches_forward(self):
+        cfg = self.CFG
+        kg = KeyGen(jax.random.PRNGKey(1))
+        params, _ = split(S.init_mamba2(kg, cfg, dtype=jnp.float32))
+        x = 0.1 * jax.random.normal(jax.random.PRNGKey(2), (2, 16, cfg.d_model),
+                                    jnp.float32)
+        y_full, (h_full, _) = S.mamba2_forward(params, cfg, x)
+        # replay token-by-token through the decode recurrence
+        h = jnp.zeros((2, cfg.n_heads, cfg.head_dim, cfg.d_state), jnp.float32)
+        conv = jnp.zeros((2, cfg.d_conv - 1, cfg.d_inner + 2 * cfg.d_state),
+                         jnp.float32)
+        outs = []
+        state = (h, conv)
+        for t in range(16):
+            y_t, state = S.mamba2_decode(params, cfg, x[:, t:t + 1], state)
+            outs.append(y_t)
+        y_dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_full),
+                                   atol=3e-4, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(state[0]), np.asarray(h_full),
+                                   atol=3e-4, rtol=1e-3)
+
+    def test_state_carry_across_segments(self):
+        # prefill in two segments == one pass (the SSM state handoff that
+        # replaces chunk routing for this family, DESIGN.md §4)
+        cfg = self.CFG
+        kg = KeyGen(jax.random.PRNGKey(3))
+        params, _ = split(S.init_mamba2(kg, cfg, dtype=jnp.float32))
+        x = 0.1 * jax.random.normal(jax.random.PRNGKey(4), (1, 32, cfg.d_model),
+                                    jnp.float32)
+        y_full, (h_full, _) = S.mamba2_forward(params, cfg, x)
+        y1, (h1, conv1) = S.mamba2_forward(params, cfg, x[:, :16])
+        y2, (h2, _) = S.mamba2_forward(params, cfg, x[:, 16:], h0=h1,
+                                       conv_state=conv1)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                                   np.asarray(y_full), atol=3e-4, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                                   atol=3e-4, rtol=1e-3)
+
+
+class TestMoE:
+    CFG = MOE.MoEConfig(d_model=32, d_expert=64, n_experts=8, top_k=2,
+                        n_shared=1, capacity_factor=8.0)  # no drops
+
+    def _dense_ref(self, p, cfg, x):
+        """Reference: every expert on every token, weighted by router."""
+        xt = x.reshape(-1, x.shape[-1])
+        logits = xt.astype(jnp.float32) @ p["router"]
+        probs = jax.nn.softmax(logits, -1)
+        w, idx = jax.lax.top_k(probs, cfg.top_k)
+        w = w / w.sum(-1, keepdims=True)
+        y = jnp.zeros_like(xt, dtype=jnp.float32)
+        for e in range(cfg.n_experts):
+            h = jax.nn.silu(xt @ p["gate"][e]) * (xt @ p["up"][e])
+            oe = (h @ p["down"][e]).astype(jnp.float32)
+            we = jnp.sum(jnp.where(idx == e, w, 0.0), -1)
+            y = y + oe * we[:, None]
+        if cfg.n_shared:
+            h = jax.nn.silu(xt @ p["sh_gate"]) * (xt @ p["sh_up"])
+            y = y + (h @ p["sh_down"]).astype(jnp.float32)
+        return y.reshape(x.shape)
+
+    def test_sorted_dispatch_matches_dense(self):
+        cfg = self.CFG
+        kg = KeyGen(jax.random.PRNGKey(0))
+        params, _ = split(MOE.init_moe(kg, cfg, dtype=jnp.float32))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model),
+                              jnp.float32)
+        y, aux = MOE.moe_apply(params, cfg, x)
+        ref = self._dense_ref(params, cfg, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-3)
+        assert np.isfinite(float(aux))
+
+    def test_capacity_drops_are_bounded(self):
+        # with tight capacity some tokens drop — output stays finite and
+        # close-ish to the dense ref (lost tokens only)
+        cfg = MOE.MoEConfig(d_model=32, d_expert=64, n_experts=8, top_k=2,
+                            capacity_factor=1.0)
+        kg = KeyGen(jax.random.PRNGKey(2))
+        params, _ = split(MOE.init_moe(kg, cfg, dtype=jnp.float32))
+        x = jax.random.normal(jax.random.PRNGKey(3), (4, 16, cfg.d_model),
+                              jnp.float32)
+        y, _ = MOE.moe_apply(params, cfg, x)
+        assert np.all(np.isfinite(np.asarray(y)))

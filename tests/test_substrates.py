@@ -1,0 +1,222 @@
+"""Data pipeline, checkpointing, fault-tolerant loop, optimizer, and the
+predicate-driven serving engine."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.core import constants as C
+from repro.data.pipeline import DataConfig, SyntheticPipeline
+from repro.models import model as MD
+from repro.models.module import split
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.step import TrainConfig, make_train_step
+
+
+class TestData:
+    def test_deterministic_resume(self):
+        p = SyntheticPipeline(DataConfig(vocab=100, seq_len=8,
+                                         global_batch=4))
+        a = p.batch_at(7)
+        b = p.batch_at(7)
+        np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                      np.asarray(b["tokens"]))
+        c = p.batch_at(8)
+        assert not np.array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(c["tokens"]))
+
+    def test_targets_are_shifted_tokens(self):
+        p = SyntheticPipeline(DataConfig(vocab=100, seq_len=8,
+                                         global_batch=2))
+        b = p.batch_at(0)
+        np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                      np.asarray(b["targets"][:, :-1]))
+
+
+class TestOptim:
+    def test_adamw_first_step_is_lr_sized(self):
+        cfg = AdamWConfig(lr=1e-2, weight_decay=0.0, grad_clip=1e9)
+        params = {"w": jnp.ones((4, 4))}
+        grads = {"w": jnp.full((4, 4), 0.5)}
+        st = adamw_init(params, cfg)
+        new_p, st, mets = adamw_update(params, grads, st, cfg)
+        # bias-corrected first step: delta ~ lr * sign(g)
+        np.testing.assert_allclose(np.asarray(params["w"] - new_p["w"]),
+                                   1e-2, rtol=1e-3)
+
+    def test_grad_clip(self):
+        cfg = AdamWConfig(grad_clip=1.0)
+        params = {"w": jnp.zeros((8,))}
+        grads = {"w": jnp.full((8,), 100.0)}
+        st = adamw_init(params, cfg)
+        _, _, mets = adamw_update(params, grads, st, cfg)
+        assert float(mets["grad_norm"]) > 1.0   # reported pre-clip
+
+    def test_bf16_states_track_f32(self):
+        k = jax.random.PRNGKey(0)
+        params = {"w": jax.random.normal(k, (16, 16))}
+        grads = {"w": 0.01 * jax.random.normal(k, (16, 16))}
+        outs = {}
+        for dt in (jnp.float32, jnp.bfloat16):
+            cfg = AdamWConfig(state_dtype=dt)
+            st = adamw_init(params, cfg)
+            p2, _, _ = adamw_update(params, grads, st, cfg)
+            outs[dt] = np.asarray(p2["w"])
+        np.testing.assert_allclose(outs[jnp.float32], outs[jnp.bfloat16],
+                                   atol=1e-4)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        cm = CheckpointManager(tmp_path)
+        tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.bfloat16),
+                "b": {"c": jnp.ones((4,), jnp.float32)}}
+        cm.save(10, tree, blocking=True)
+        back = cm.restore(10, tree)
+        np.testing.assert_array_equal(np.asarray(back["a"], np.float32),
+                                      np.asarray(tree["a"], np.float32))
+        assert cm.latest_step() == 10
+
+    def test_gc_keeps_last_k(self, tmp_path):
+        cm = CheckpointManager(tmp_path, keep=2)
+        tree = {"a": jnp.zeros((2,))}
+        for s in (1, 2, 3, 4):
+            cm.save(s, tree, blocking=True)
+        assert cm.all_steps() == [3, 4]
+
+    def test_async_save(self, tmp_path):
+        cm = CheckpointManager(tmp_path)
+        tree = {"a": jnp.zeros((1000,))}
+        cm.save(5, tree, blocking=False)
+        cm.wait()
+        assert cm.latest_step() == 5
+
+
+class TestFaultTolerantLoop:
+    def test_loop_survives_induced_failure(self, tmp_path):
+        cfg = get_smoke_config("qwen2_5_32b")
+        params, _ = split(MD.init_model(cfg, jax.random.PRNGKey(0)))
+        ocfg = AdamWConfig(lr=1e-3)
+        opt_state = adamw_init(params, ocfg)
+        step_fn = jax.jit(make_train_step(cfg, ocfg))
+        pipe = SyntheticPipeline.for_model(cfg, seq_len=16, global_batch=2)
+        cm = CheckpointManager(tmp_path)
+        fired = {"done": False}
+
+        def fault(step):
+            if step == 7 and not fired["done"]:
+                fired["done"] = True
+                raise RuntimeError("induced node failure")
+
+        params, opt_state, log = train_loop(
+            step_fn, params, opt_state, pipe, cm,
+            LoopConfig(total_steps=12, ckpt_every=5, log_every=1),
+            fault_hook=fault)
+        events = [e for e in log if e.get("event") == "restored"]
+        assert len(events) == 1
+        steps = [e["step"] for e in log if "loss" in e]
+        # steps 5 and 6 replayed after restore-to-5
+        assert steps.count(5) == 2 and steps.count(6) == 2
+        assert max(steps) == 11
+        # loss is finite throughout and the replayed data was identical
+        losses = {(e["step"], round(e["loss"], 5)) for e in log
+                  if "loss" in e}
+        by_step = {}
+        dup_consistent = True
+        for s, l in losses:
+            if s in by_step and by_step[s] != l:
+                dup_consistent = False
+            by_step[s] = l
+        assert dup_consistent    # exact replay from the stateless pipeline
+
+
+class TestServingEngine:
+    def _engine(self, n=4, ipp=0):
+        eng = ServingEngine(n, pool_tokens=100_000, instances_per_pod=ipp)
+        eng.register_chunk("case_law_42", holder=1, length=2048)
+        return eng
+
+    def test_route_at_decode(self):
+        eng = self._engine()
+        recs = eng.schedule_step([Request(0, home=0,
+                                          chunk_ids=["case_law_42"])])
+        assert len(recs) == 1 and recs[0].primitive == "route"
+
+    def test_resident_is_free(self):
+        eng = self._engine()
+        recs = eng.schedule_step([Request(0, home=1,
+                                          chunk_ids=["case_law_42"])])
+        assert recs == []
+
+    def test_cross_request_batching(self):
+        # the §5.3 dispatcher-batching reduction: one dispatch per holder
+        eng = self._engine(n=8)
+        reqs = [Request(i, home=i % 4, chunk_ids=["case_law_42"], m_q=4)
+                for i in range(4)]
+        recs = eng.schedule_step(reqs)
+        routes = [r for r in recs if r.primitive == "route"]
+        assert len(routes) == 1
+        assert routes[0].m_q_total == 12   # home=1 is resident (free)
+
+    def test_fanin_cap_spawns_replica(self):
+        # §6.3: beyond the N~8 elbow a replica (amortised FETCH) appears
+        eng = self._engine(n=16)
+        reqs = [Request(i, home=(i % 15) if (i % 15) != 1 else 2,
+                        chunk_ids=["case_law_42"])
+                for i in range(12)]
+        recs = eng.schedule_step(reqs)
+        kinds = {r.primitive for r in recs}
+        assert "fetch_replica" in kinds
+        assert 2 in eng.store.holders_of("case_law_42") or \
+               len(eng.store.holders_of("case_law_42")) == 2
+
+    def test_straggler_backup(self):
+        eng = self._engine(n=4)
+        eng.store.add_replica("case_law_42", 3)
+        eng.set_straggler(1, 5.0)
+        recs = eng.schedule_step([Request(0, home=0,
+                                          chunk_ids=["case_law_42"])])
+        assert any(r.backup for r in recs)
+        # the backup caps the critical path
+        assert eng.step_latency(eng.step_idx) < max(
+            r.est_cost_s for r in recs if not r.backup) + 1e-12
+
+    def test_holder_failure_rehomes(self):
+        eng = self._engine(n=4)
+        eng.store.add_replica("case_law_42", 2)
+        orphaned = eng.fail_instance(1)
+        assert orphaned == []    # replica promoted
+        assert eng.store.lookup("case_law_42").holder == 2
+        recs = eng.schedule_step([Request(0, home=0,
+                                          chunk_ids=["case_law_42"])])
+        assert all(r.holder != 1 for r in recs)
+
+    def test_orphaned_chunk_goes_local(self):
+        eng = self._engine(n=4)
+        eng.fail_instance(1)     # only copy dies
+        recs = eng.schedule_step([Request(0, home=0,
+                                          chunk_ids=["case_law_42"])])
+        assert recs[0].primitive == "local"
+
+    def test_cross_pod_uses_dcn_probe(self):
+        eng = ServingEngine(8, 100_000, instances_per_pod=4)
+        eng.register_chunk("x", holder=6, length=2048)
+        recs = eng.schedule_step([Request(0, home=0, chunk_ids=["x"])])
+        dcn = C.fabric("tpu_dcn")
+        assert recs[0].est_cost_s > dcn.t_probe_s
+
+
+class TestGradCompression:
+    def test_error_feedback_quantization(self):
+        from repro.optim.compress import quantize, dequantize
+        g = jax.random.normal(jax.random.PRNGKey(0), (128,))
+        q, s = quantize(g)
+        err = np.abs(np.asarray(dequantize(q, s) - g))
+        assert err.max() <= float(s) * 0.5 + 1e-6
