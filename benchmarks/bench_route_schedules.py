@@ -25,6 +25,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.core.merge import Partial
 from repro.core.routing import route_fanout, route_pairwise, route_ring
 from repro.distributed.hlo_costs import analyse_hlo
@@ -32,15 +33,14 @@ from repro.models.mla import MLAConfig
 
 CFG = MLAConfig()
 NI, B, S_LOCAL = 8, 32, 2048
-mesh = jax.make_mesh((NI,), ("instance",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((NI,), ("instance",))
 q = jax.ShapeDtypeStruct((NI * B, CFG.n_heads, CFG.d_qk), jnp.bfloat16)
 ckv = jax.ShapeDtypeStruct((NI * S_LOCAL, CFG.d_qk), jnp.bfloat16)
 valid = jax.ShapeDtypeStruct((NI * S_LOCAL,), jnp.bool_)
 out = {}
 
 def compile_and_count(name, fn, specs, out_specs, args):
-    sm = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=specs,
+    sm = jax.jit(compat.shard_map(fn, mesh=mesh, in_specs=specs,
                                out_specs=out_specs))
     c = analyse_hlo(sm.lower(*args).compile().as_text(), NI)
     out[name] = {"wire": c.collective_wire_bytes,

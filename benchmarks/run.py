@@ -28,6 +28,7 @@ BENCHES = [
     "bench_host_overhead",       # §5.3
     "bench_wire_bytes_hlo",      # §2.1/§5.2 measured from compiled HLO
     "bench_route_schedules",     # beyond-paper: pairwise/fanout/ring bytes
+    "bench_serving_steadystate",  # §6.3/§8 multi-step scheduler throughput
 ]
 
 

@@ -80,14 +80,20 @@ def main():
     print(f"replicate beyond the elbow? "
           f"{P.replication_threshold(fan)} (elbow N={P.holder_fanout_cap()})")
 
-    # drive one engine step with all agents requesting the doc: the engine
-    # caps fan-in at 8 and spawns a replica for the overflow
+    # drive the engine over MULTIPLE steps with all agents hammering the
+    # doc: step 1 caps fan-in at the elbow and spawns a replica (amortised
+    # FETCH); later steps see the replica resident and rebalance onto it
     reqs = [Request(req_id=a, home=(a % 7) + 1,
-                    chunk_ids=["pinned_codebase"]) for a in range(N_AGENTS)]
-    recs = eng.schedule_step(reqs)
-    kinds = sorted(r.primitive for r in recs)
-    print(f"engine dispatches: {kinds}")
-    print(f"holders now: {eng.store.holders_of('pinned_codebase')}")
+                    chunk_ids=["pinned_codebase"],
+                    expected_reuse_steps=8) for a in range(N_AGENTS)]
+    for _ in range(3):
+        eng.schedule_step(reqs)
+        s = eng.stats[-1]
+        print(f"engine step {s.step}: dispatches {s.primitives}, "
+              f"{s.n_resident}/{s.n_pairs} resident, "
+              f"critical path {s.latency_s*1e6:.0f}us")
+    print(f"holders now: {eng.store.holders_of('pinned_codebase')} "
+          f"(replica persisted past the N~{eng.cfg.fanin_cap} elbow)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,65 @@
+"""Version-gated JAX API shims shared by src/, tests/progs/ and benchmarks/.
+
+The repo must run on the installed jax (0.4.x here) and on current releases:
+
+* ``jax.shard_map`` was ``jax.experimental.shard_map.shard_map`` before 0.6;
+* ``jax.make_mesh(..., axis_types=...)`` / ``jax.sharding.AxisType`` do not
+  exist before 0.6 (explicit Auto axes are the 0.4 default anyway);
+* ``Compiled.cost_analysis()`` returns a one-element list on older jaxlib
+  and a plain dict on newer ones.
+
+Keep every version branch HERE — callers import the symbol, never probe jax.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:                      # jax < 0.6
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def axis_size(axis_name) -> int:
+    """lax.axis_size (jax >= 0.6); psum(1, axis) on older releases."""
+    try:
+        return jax.lax.axis_size(axis_name)
+    except AttributeError:
+        return jax.lax.psum(1, axis_name)
+
+
+def pvary(x, axes):
+    """lax.pvary where it exists; identity before the vma type system (old
+    shard_map does not distinguish varying from invariant carries)."""
+    pv = getattr(jax.lax, "pvary", None)
+    return pv(x, axes) if pv is not None else x
+
+
+def shard_map_unchecked(f, **kw):
+    """shard_map with the static replication checker off (the kwarg was
+    renamed check_rep -> check_vma across jax versions). Needed for bodies
+    old jax mis-types, e.g. a psum inside a scan carry."""
+    try:
+        return shard_map(f, check_rep=False, **kw)
+    except TypeError:
+        return shard_map(f, check_vma=False, **kw)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """jax.make_mesh with explicit Auto axis_types where the API has them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def cost_analysis(compiled) -> dict:
+    """Compiled.cost_analysis() normalized to a flat dict (may be empty)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}

@@ -24,6 +24,7 @@ class Chunk:
     refcount: int = 0           # concurrent readers (agent fan-in, §6.3)
     replicas: List[int] = dataclasses.field(default_factory=list)
     immutable: bool = True
+    last_access: int = 0        # engine step of last read (replica LRU)
 
 
 @dataclasses.dataclass
@@ -51,6 +52,10 @@ class ChunkStore:
         self._fork_ids = itertools.count()
 
     # -- allocation ---------------------------------------------------------
+    # _alloc[i] tracks tokens in use on instance i. Offsets handed out are
+    # the in-use watermark at allocation time — with free() they are logical
+    # labels, not byte addresses (this is the control plane; the device-side
+    # pool does its own placement).
 
     def allocate(self, instance: int, length: int) -> int:
         off = self._alloc[instance]
@@ -60,6 +65,15 @@ class ChunkStore:
                 f"({off}+{length} > {self.pool_tokens})")
         self._alloc[instance] = off + length
         return off
+
+    def free(self, instance: int, length: int) -> None:
+        self._alloc[instance] = max(0, self._alloc[instance] - length)
+
+    def used(self, instance: int) -> int:
+        return self._alloc[instance]
+
+    def capacity_left(self, instance: int) -> int:
+        return self.pool_tokens - self._alloc[instance]
 
     def register(self, chunk_id: str, holder: int, length: int,
                  position_base: int = 0) -> Chunk:
@@ -83,6 +97,12 @@ class ChunkStore:
     def resident_on(self, chunk_id: str, instance: int) -> bool:
         return instance in self.holders_of(chunk_id)
 
+    def touch(self, chunk_id: str, step: int) -> None:
+        """Record a read at engine step `step` (drives replica LRU)."""
+        c = self._chunks[chunk_id]
+        if step > c.last_access:
+            c.last_access = step
+
     # -- replication (the amortised FETCH beyond the N~8 elbow, §6.3) -------
 
     def add_replica(self, chunk_id: str, instance: int) -> Chunk:
@@ -91,6 +111,23 @@ class ChunkStore:
             self.allocate(instance, c.length)
             c.replicas.append(instance)
         return c
+
+    def replicas_on(self, instance: int) -> List[str]:
+        """Chunk ids with a NON-canonical copy on `instance` — the retirable
+        set under pool pressure (canonical copies never retire)."""
+        return [c.chunk_id for c in self._chunks.values()
+                if instance in c.replicas]
+
+    def evict_replica(self, chunk_id: str, instance: int) -> None:
+        """Retire a replica and return its tokens to the pool. The canonical
+        copy is not evictable this way."""
+        c = self._chunks[chunk_id]
+        if instance == c.holder:
+            raise ValueError(
+                f"{chunk_id}: instance {instance} holds the canonical copy")
+        if instance in c.replicas:
+            c.replicas.remove(instance)
+            self.free(instance, c.length)
 
     def drop_holder(self, instance: int) -> List[str]:
         """Fault handling: instance died. Chunks whose only copy lived there

@@ -18,7 +18,7 @@ a scheduler evaluates this *arithmetically*, with no online calibration
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -188,6 +188,144 @@ def t_route_congested(fabric: Fabric, m_q: int, k_flows: int,
     else:
         bw = fabric.bw_Bps
     return fabric.t_probe_s * probe_mult + m_q * payload.qp_bytes / bw
+
+
+def t_route_congested_full(fabric: Fabric, m_q: int, k_flows: int,
+                           payload: Payload = MLA_PAYLOAD,
+                           t_compute: float = np.mean(
+                               C.HOLDER_COMPUTE_DECODE_S),
+                           t_merge: float = C.MERGE_COST_S) -> float:
+    """End-to-end congested ROUTE: transport under K flows + holder compute
+    + merge. The one formula both the predicate (batch form below) and the
+    engine's dispatch pricing use — keep them in lockstep here."""
+    return t_route_congested(fabric, m_q, k_flows, payload) \
+        + t_compute + t_merge
+
+
+# ---------------------------------------------------------------------------
+# Vectorized (array-safe) forms. The scalar functions above ARE element-wise
+# in their numeric arguments but take one Fabric object; the batch forms take
+# a FabricArrays table + integer fabric indices so a scheduler can price a
+# whole decode step in a handful of numpy expressions (the §4.3 point taken
+# to throughput: "evaluated, not profiled" — and evaluated in bulk).
+# Element-wise they match the scalar forms exactly (tests/test_predicate_batch).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricArrays:
+    """Struct-of-arrays view of a fabric table, indexable by fabric id."""
+    names: Tuple[str, ...]
+    t_probe_s: np.ndarray
+    bw_Bps: np.ndarray
+    link_peak_Bps: np.ndarray
+    t_launch_s: np.ndarray
+
+    @classmethod
+    def from_fabrics(cls, fabrics: Sequence[Fabric]) -> "FabricArrays":
+        return cls(
+            names=tuple(f.name for f in fabrics),
+            t_probe_s=np.array([f.t_probe_s for f in fabrics], np.float64),
+            bw_Bps=np.array([f.bw_Bps for f in fabrics], np.float64),
+            link_peak_Bps=np.array([f.link_peak_Bps for f in fabrics],
+                                   np.float64),
+            t_launch_s=np.array([f.t_launch_s for f in fabrics], np.float64))
+
+    def index_of(self, name: str) -> int:
+        return self.names.index(name)
+
+
+def fabric_arrays(names: Optional[Sequence[str]] = None) -> FabricArrays:
+    """FabricArrays over the named rows of C.FABRICS (all rows by default,
+    in sorted-name order so indices are stable)."""
+    keys = list(names) if names is not None else sorted(C.FABRICS)
+    return FabricArrays.from_fabrics([C.FABRICS[k] for k in keys])
+
+
+def t_route_batch(fa: FabricArrays, fabric_idx: np.ndarray,
+                  m_q: np.ndarray, payload: Payload = MLA_PAYLOAD,
+                  t_compute: float = np.mean(C.HOLDER_COMPUTE_DECODE_S),
+                  t_merge: float = C.MERGE_COST_S,
+                  t_host: np.ndarray = 0.0,
+                  include_launch: bool = False) -> np.ndarray:
+    """Vectorized t_route over (fabric_idx, m_q) arrays."""
+    fi = np.asarray(fabric_idx)
+    t = (fa.t_probe_s[fi]
+         + np.asarray(m_q, np.float64) * payload.qp_bytes / fa.bw_Bps[fi])
+    if include_launch:
+        t = t + fa.t_launch_s[fi]
+    return t + t_compute + t_merge + np.asarray(t_host, np.float64)
+
+
+def t_route_fanout_batch(fa: FabricArrays, fabric_idx: np.ndarray,
+                         m_q: np.ndarray, n_holders: np.ndarray,
+                         payload: Payload = MLA_PAYLOAD,
+                         t_compute: float = np.mean(C.HOLDER_COMPUTE_DECODE_S),
+                         t_merge_per_way: float = C.MERGE_COST_S / 8
+                         ) -> np.ndarray:
+    """Vectorized t_route_fanout (§5.4 scattered-selection fan-out)."""
+    fi = np.asarray(fabric_idx)
+    sends = (fa.t_probe_s[fi]
+             + np.asarray(m_q, np.float64) * payload.qp_bytes / fa.bw_Bps[fi])
+    return sends + t_compute + np.asarray(n_holders) * t_merge_per_way
+
+
+def t_fetch_batch(fa: FabricArrays, fabric_idx: np.ndarray,
+                  c_t: np.ndarray, payload: Payload = MLA_PAYLOAD,
+                  contiguous: np.ndarray = True) -> np.ndarray:
+    """Vectorized t_fetch: bulk pull at link peak + splice where contiguous."""
+    fi = np.asarray(fabric_idx)
+    ct = np.asarray(c_t, np.float64)
+    pull = ct * payload.b_kv_token_all_layers / fa.link_peak_Bps[fi]
+    splice = C.SPLICE_BASE_S + C.SPLICE_PER_TOKEN_S * ct
+    return pull + np.where(np.asarray(contiguous), splice, 0.0)
+
+
+def t_fetch_scattered_batch(fa: FabricArrays, fabric_idx: np.ndarray,
+                            k_selected: np.ndarray, n_holders: np.ndarray,
+                            payload: Payload = MLA_PAYLOAD,
+                            per_holder_handshake_s: float = 180e-6
+                            ) -> np.ndarray:
+    """Vectorized t_fetch_scattered (§5.4 gather; linear in n_holders)."""
+    fi = np.asarray(fabric_idx)
+    per_layer_bytes = np.asarray(k_selected, np.float64) \
+        * payload.b_kv_token_layer
+    per_layer = (np.asarray(n_holders) * per_holder_handshake_s
+                 + per_layer_bytes / fa.bw_Bps[fi])
+    return payload.n_layers * per_layer
+
+
+def t_local_batch(c_t: np.ndarray, n_layers: int = C.V2_LITE_LAYERS,
+                  c_per_token_layer: float = C.PREFILL_PER_TOKEN_LAYER_MID_S
+                  ) -> np.ndarray:
+    """Vectorized t_local (already element-wise; named for symmetry)."""
+    return np.asarray(c_t, np.float64) * n_layers * c_per_token_layer
+
+
+def t_route_congested_batch(fa: FabricArrays, fabric_idx: np.ndarray,
+                            m_q: np.ndarray, k_flows: np.ndarray,
+                            payload: Payload = MLA_PAYLOAD) -> np.ndarray:
+    """Vectorized t_route_congested (§8): flat through K<=2 concurrent
+    flows on a link; at K>=3 probe queueing + 1/(K-1) dispatch bandwidth."""
+    fi = np.asarray(fabric_idx)
+    k = np.asarray(k_flows)
+    probe_mult = np.where(k >= 3, C.CONGESTION_PROBE_MULT[3], 1.0)
+    bw = np.where(k >= 3, fa.bw_Bps[fi] / np.maximum(k - 1, 1),
+                  fa.bw_Bps[fi])
+    return (fa.t_probe_s[fi] * probe_mult
+            + np.asarray(m_q, np.float64) * payload.qp_bytes / bw)
+
+
+def t_route_congested_full_batch(fa: FabricArrays, fabric_idx: np.ndarray,
+                                 m_q: np.ndarray, k_flows: np.ndarray,
+                                 payload: Payload = MLA_PAYLOAD,
+                                 t_compute: float = np.mean(
+                                     C.HOLDER_COMPUTE_DECODE_S),
+                                 t_merge: float = C.MERGE_COST_S
+                                 ) -> np.ndarray:
+    """Vectorized t_route_congested_full (see scalar form above)."""
+    return t_route_congested_batch(fa, fabric_idx, m_q, k_flows, payload) \
+        + t_compute + t_merge
 
 
 # ---------------------------------------------------------------------------

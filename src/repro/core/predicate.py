@@ -120,6 +120,143 @@ def _explain(req: Request, tr: float, tf: float, tl: float,
 
 
 # ---------------------------------------------------------------------------
+# Vectorized predicate: one argmin over arrays for a whole decode step.
+# The serving engine prices every (request, chunk) pair of a step in a
+# handful of numpy expressions instead of a Python loop per pair.
+# decide_batch() matches decide() element-wise by construction
+# (tests/test_predicate_batch.py fuzzes the agreement).
+# ---------------------------------------------------------------------------
+
+PRIMITIVE_BY_CODE = (Primitive.ROUTE, Primitive.FETCH, Primitive.LOCAL)
+ROUTE_CODE, FETCH_CODE, LOCAL_CODE = 0, 1, 2
+
+
+@dataclasses.dataclass
+class RequestBatch:
+    """Struct-of-arrays form of Request over one scheduling batch.
+
+    fabric_idx indexes into `fabrics`; k_selected uses -1 for "no selection
+    regime" (None in the scalar form). All arrays share one shape."""
+    fabrics: cm.FabricArrays
+    m_q: np.ndarray
+    c_t: np.ndarray
+    fabric_idx: np.ndarray
+    expected_reuse_steps: np.ndarray
+    k_selected: np.ndarray            # -1 => None
+    n_holders: np.ndarray
+    position_delta: np.ndarray
+    holder_can_compute: np.ndarray    # bool
+    host_overhead: np.ndarray         # bool
+    payload: cm.Payload = cm.MLA_PAYLOAD
+
+    def __len__(self) -> int:
+        return int(np.asarray(self.m_q).shape[0])
+
+    @classmethod
+    def from_requests(cls, reqs: "list[Request]") -> "RequestBatch":
+        """Pack scalar Requests; fabrics are interned by object identity so
+        fitted/ad-hoc Fabric rows work too."""
+        uniq: list = []
+        idx = []
+        for r in reqs:
+            try:
+                idx.append(uniq.index(r.fabric))
+            except ValueError:
+                uniq.append(r.fabric)
+                idx.append(len(uniq) - 1)
+        payloads = {r.payload for r in reqs}
+        if len(payloads) > 1:
+            raise ValueError("one RequestBatch serves one payload geometry")
+        return cls(
+            fabrics=cm.FabricArrays.from_fabrics(uniq or [C.fabric("tpu_ici")]),
+            m_q=np.array([r.m_q for r in reqs], np.int64),
+            c_t=np.array([r.c_t for r in reqs], np.int64),
+            fabric_idx=np.array(idx, np.int64),
+            expected_reuse_steps=np.array(
+                [r.expected_reuse_steps for r in reqs], np.int64),
+            k_selected=np.array(
+                [-1 if r.k_selected is None else r.k_selected for r in reqs],
+                np.int64),
+            n_holders=np.array([r.n_holders for r in reqs], np.int64),
+            position_delta=np.array([r.position_delta for r in reqs],
+                                    np.int64),
+            holder_can_compute=np.array([r.holder_can_compute for r in reqs],
+                                        bool),
+            host_overhead=np.array([r.host_overhead for r in reqs], bool),
+            payload=reqs[0].payload if reqs else cm.MLA_PAYLOAD)
+
+
+@dataclasses.dataclass(frozen=True)
+class DecisionBatch:
+    """Array-of-decisions: per element the three costs + the argmin code."""
+    code: np.ndarray                  # int8: 0 ROUTE / 1 FETCH / 2 LOCAL
+    t_route: np.ndarray
+    t_fetch: np.ndarray
+    t_local: np.ndarray
+
+    def primitive(self, i: int) -> Primitive:
+        return PRIMITIVE_BY_CODE[int(self.code[i])]
+
+    def primitives(self) -> "list[Primitive]":
+        return [PRIMITIVE_BY_CODE[int(c)] for c in self.code]
+
+
+def route_cost_batch(b: RequestBatch,
+                     k_flows: Optional[np.ndarray] = None) -> np.ndarray:
+    """Vectorized route_cost(). With k_flows (per-element concurrent flows
+    on the element's link), prices under §8 congestion instead of the
+    uncontended transport — the engine's steady-state path."""
+    fa = b.fabrics
+    has_sel = b.k_selected >= 0
+    fanout = has_sel & (b.n_holders > 1)
+    t_host = np.where(
+        b.host_overhead,
+        C.HOST_OVERHEAD_BASE_S + C.HOST_OVERHEAD_PER_ROW_S * b.m_q, 0.0)
+    if k_flows is None:
+        plain = cm.t_route_batch(fa, b.fabric_idx, b.m_q, b.payload)
+    else:
+        plain = cm.t_route_congested_full_batch(fa, b.fabric_idx, b.m_q,
+                                                k_flows, b.payload)
+    fan = cm.t_route_fanout_batch(fa, b.fabric_idx, b.m_q,
+                                  np.maximum(b.n_holders, 1), b.payload)
+    t = np.where(fanout, fan, plain) + t_host
+    return np.where(b.holder_can_compute, t, np.inf)
+
+
+def fetch_cost_batch(b: RequestBatch) -> np.ndarray:
+    """Vectorized fetch_cost(): scattered gather under selection (never
+    amortised, §5.4); otherwise pull+splice amortised over expected reuse."""
+    fa = b.fabrics
+    has_sel = b.k_selected >= 0
+    scattered = cm.t_fetch_scattered_batch(
+        fa, b.fabric_idx, np.maximum(b.k_selected, 0),
+        np.maximum(b.n_holders, 1), b.payload)
+    contiguous = b.position_delta != 0
+    bulk = cm.t_fetch_batch(fa, b.fabric_idx, b.c_t, b.payload, contiguous)
+    bulk = bulk / np.maximum(1, b.expected_reuse_steps)
+    return np.where(has_sel, scattered, bulk)
+
+
+def local_cost_batch(b: RequestBatch,
+                     c_per_token_layer: float =
+                     C.PREFILL_PER_TOKEN_LAYER_MID_S) -> np.ndarray:
+    return cm.t_local_batch(b.c_t, b.payload.n_layers, c_per_token_layer)
+
+
+def decide_batch(b: RequestBatch,
+                 k_flows: Optional[np.ndarray] = None) -> DecisionBatch:
+    """The closed-form predicate over a whole batch: element-wise argmin of
+    the three vectorized costs. Tie-break order (ROUTE < FETCH < LOCAL)
+    matches decide()'s min() ordering. k_flows (optional) prices ROUTE under
+    link congestion — used by the engine's steady-state scheduler."""
+    tr = route_cost_batch(b, k_flows)
+    tf = fetch_cost_batch(b)
+    tl = local_cost_batch(b)
+    code = np.argmin(np.stack([tr, tf, tl], axis=0), axis=0).astype(np.int8)
+    return DecisionBatch(code, tr, tf, tl)
+
+
+# ---------------------------------------------------------------------------
 # Serving rules of thumb (§5.5) as queryable helpers.
 # ---------------------------------------------------------------------------
 

@@ -42,6 +42,45 @@ _WHILE_BODY = re.compile(r"body=%?([\w.\-]+)")
 _CONST_INT = re.compile(r"constant\((\d+)\)")
 _CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _OPERAND_NAME = re.compile(r"%?([\w.\-]+)")
+_SIGIL_NAME = re.compile(r"%([\w.\-]+)\s*$")
+_SHAPE_PREFIX = re.compile(
+    r"^\(?[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?\s*")
+
+
+def _split_top_level(s: str) -> List[str]:
+    """Split on commas not nested in ()/[]/{} (tuple-typed operands)."""
+    parts, depth, start = [], 0, 0
+    for i, ch in enumerate(s):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            parts.append(s[start:i])
+            start = i + 1
+    parts.append(s[start:])
+    return parts
+
+
+def operand_names(operands: str) -> List[str]:
+    """Operand instruction names, robust to both HLO operand styles:
+    bare (``dot(%a, %b)``) and inline-typed
+    (``dot(f32[32,64]{1,0} %a, f32[64,64]{1,0} %b)``) — newer jaxlib
+    prints the latter, where a naive identifier regex grabs ``f32``."""
+    names = []
+    for seg in _split_top_level(operands):
+        seg = seg.strip()
+        if not seg:
+            continue
+        m = _SIGIL_NAME.search(seg)
+        if m:                      # `%name` sigil: unambiguous
+            names.append(m.group(1))
+            continue
+        seg = _SHAPE_PREFIX.sub("", seg)     # drop a leading shape, if any
+        m = _OPERAND_NAME.match(seg)
+        if m:
+            names.append(m.group(1))
+    return names
 
 
 def _balanced(s: str, start: int = 0):
@@ -174,8 +213,8 @@ def analyse_hlo(hlo: str, n_devices: int = 1) -> HloCosts:
 
     def operand_bytes(comp: Computation, operands: str) -> int:
         total = 0
-        for om in _OPERAND_NAME.finditer(operands):
-            shape = comp.symbols.get(om.group(1))
+        for nm in operand_names(operands):
+            shape = comp.symbols.get(nm)
             if shape:
                 total += _shape_elems_bytes(shape)[1]
         return total
@@ -223,7 +262,7 @@ def analyse_hlo(hlo: str, n_devices: int = 1) -> HloCosts:
                     param_idx[iname] = int(m.group(1))
                     full_bytes[iname] = _shape_elems_bytes(shape)[1]
                 continue
-            names = [m.group(1) for m in _OPERAND_NAME.finditer(operands)]
+            names = operand_names(operands)
             src = [alias.get(nm, nm) for nm in names]
             if op in ("convert", "bitcast", "copy", "reshape") and src:
                 if src[0] in param_idx or src[0] in alias.values():
@@ -305,8 +344,8 @@ def analyse_hlo(hlo: str, n_devices: int = 1) -> HloCosts:
 
             local = HloCosts()
             if op == "dot":
-                first = _OPERAND_NAME.search(operands)
-                lhs_shape = comp.symbols.get(first.group(1), "") if first else ""
+                names = operand_names(operands)
+                lhs_shape = comp.symbols.get(names[0], "") if names else ""
                 lhs_dims = _shape_dims(lhs_shape)
                 cm = _CONTRACT.search(attrs)
                 k = 1
@@ -315,7 +354,7 @@ def analyse_hlo(hlo: str, n_devices: int = 1) -> HloCosts:
                     k = int(np.prod([lhs_dims[c] for c in cdims])) if cdims else 1
                 local.flops = 2.0 * res_elems * k
             elif op == "convolution":
-                names = _OPERAND_NAME.findall(operands)
+                names = operand_names(operands)
                 ker = comp.symbols.get(names[1], "") if len(names) > 1 else ""
                 kelems, _ = _shape_elems_bytes(ker)
                 local.flops = 2.0 * res_elems * max(1, kelems // max(
@@ -344,8 +383,7 @@ def analyse_hlo(hlo: str, n_devices: int = 1) -> HloCosts:
                 cm = re.search(r"calls=%?([\w.\-]+)", attrs)
                 access, res_override = fusion_param_access(cm.group(1)) \
                     if cm else ({}, None)
-                names = [m.group(1)
-                         for m in _OPERAND_NAME.finditer(operands)]
+                names = operand_names(operands)
                 tb = float(res_bytes) if res_override is None \
                     else float(res_override)
                 for pos, nm in enumerate(names):
@@ -359,8 +397,7 @@ def analyse_hlo(hlo: str, n_devices: int = 1) -> HloCosts:
                 local.traffic_bytes = 2.0 * res_bytes     # slice in + out
             elif op == "dynamic-update-slice":
                 # reads+writes the update region, not the whole buffer
-                names = [m.group(1)
-                         for m in _OPERAND_NAME.finditer(operands)]
+                names = operand_names(operands)
                 upd = comp.symbols.get(names[1], "") if len(names) > 1 else ""
                 ub = _shape_elems_bytes(upd)[1]
                 local.traffic_bytes = 2.0 * ub

@@ -1,2 +1,4 @@
-from repro.serving.engine import (EngineConfig, ServingEngine, Instance,
-                                  Request)
+from repro.serving.engine import (DispatchRecord, EngineConfig, Instance,
+                                  Request, ServingEngine, StepStats)
+from repro.serving.workload import (WorkloadConfig, agentic_trace,
+                                    register_corpus)

@@ -1,31 +1,41 @@
 """Predicate-driven serving engine: the layer that CONSUMES the paper's
 cost model (§5: "the serving system that consumes the rule").
 
-Responsibilities per decode step:
-  * residency lookup (chunk_store) per (request, chunk);
-  * transport choice per the closed-form predicate (core.predicate) with
-    the fabric picked from the instance topology (intra-pod ICI vs
-    cross-pod DCN — probe latency, not peak bandwidth, §5.5);
-  * cross-request dispatcher batching: all queries routed to one holder in
-    a step ship as ONE batched dispatch (the §5.3 reduction);
-  * per-holder fan-in cap at the N~8 compute elbow (§6.3): beyond it,
-    schedule a replica (amortised FETCH) and rebalance;
-  * straggler mitigation: a backup dispatch fires to a replica holder when
-    a holder's simulated latency exceeds the p99 deadline;
-  * fault handling: drop_holder re-homes chunks (replica promotion) and
-    orphaned chunks re-enter via LOCAL (re-prefill).
+The scheduler is vectorized and multi-step. Per decode step it:
 
-The transport itself can run in two modes: 'sim' (latency bookkeeping from
-the cost model — used by benchmarks) and 'exec' (actual JAX math via
-core.routing on a single host — used by correctness tests/examples).
+  * resolves residency (chunk_store) for every (request, chunk) pair;
+  * prices ALL pairs in one decide_batch() call (core.predicate) — the
+    closed-form §5 predicate evaluated as numpy arrays, with the fabric
+    picked per pair from the instance topology (intra-pod ICI vs cross-pod
+    DCN — probe latency, not peak bandwidth, §5.5);
+  * prices ROUTE under link subscription: concurrent batched dispatches
+    sharing a (holder, fabric) link pay t_route_congested (§8) — at K>=3
+    flows the predicate itself can flip decode traffic to FETCH;
+  * batches cross-request dispatches per (holder, chunk, fabric) — one
+    dispatch per holder per fabric (the §5.3 reduction, without the seed
+    bug of pricing a cross-pod requester at the first entry's fabric);
+  * caps per-holder fan-in at the N~8 compute elbow (§6.3): beyond it,
+    schedules a replica (amortised FETCH) and rebalances;
+  * PERSISTS fetches: a chunk the predicate says to FETCH becomes resident
+    at the requester (chunk_store replica), so subsequent steps serve it
+    locally for free — the amortisation the predicate priced actually
+    accrues across steps;
+  * retires cold replicas LRU under pool pressure (canonical copies never
+    retire) so sustained traffic cannot exhaust an instance pool;
+  * fires straggler backups past the p99 deadline and re-homes orphaned
+    chunks via LOCAL on holder failure.
+
+run() drives the loop over a trace (see repro.serving.workload) and emits
+per-step StepStats — the substrate benchmarks/bench_serving_steadystate.py
+reports p50/p99 step latency and scheduler decisions/sec from.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import heapq
+import time
 from collections import defaultdict
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -63,6 +73,8 @@ class EngineConfig:
     intra_pod_fabric: str = "tpu_ici"
     cross_pod_fabric: str = "tpu_dcn"
     payload: cm.Payload = cm.MLA_PAYLOAD
+    congestion_aware: bool = True                  # §8 link-subscription pricing
+    persist_fetches: bool = True                   # fetched chunks stay resident
 
 
 @dataclasses.dataclass
@@ -77,6 +89,55 @@ class DispatchRecord:
     backup: bool = False
 
 
+@dataclasses.dataclass
+class StepStats:
+    """Per-step scheduler telemetry (the benchmark's raw material)."""
+    step: int
+    n_requests: int
+    n_pairs: int                   # (request, chunk) accesses resolved
+    n_priced: int                  # pairs that reached decide_batch
+    n_resident: int                # served by local attention, no transport
+    n_dispatches: int              # primary dispatches issued
+    primitives: Dict[str, int]
+    latency_s: float               # simulated critical path of the step
+    sched_wall_s: float            # scheduler wall-clock for this step
+    replicas_spawned: int = 0
+    evictions: int = 0
+
+    @property
+    def decisions_per_sec(self) -> float:
+        """Predicate evaluations per wall-clock second (resident pairs skip
+        the predicate and are excluded)."""
+        return self.n_priced / self.sched_wall_s if self.sched_wall_s else 0.0
+
+
+def _critical_path(records: List["DispatchRecord"]) -> float:
+    """Critical-path latency of one step's records: max over primary
+    dispatches, where a backup caps its primary's contribution."""
+    backups = [r for r in records if r.backup]
+    worst = 0.0
+    for r in records:
+        if r.backup:
+            continue
+        cost = r.est_cost_s
+        for b in backups:
+            if b.chunk_id == r.chunk_id:
+                cost = min(cost, b.est_cost_s)
+        worst = max(worst, cost)
+    return worst
+
+
+# one resolved (request, chunk) access, pre-decision
+@dataclasses.dataclass
+class _Pair:
+    rq: Request
+    chunk_id: str
+    holder: int
+    fabric_idx: int
+    c_t: int
+    n_holders: int
+
+
 class ServingEngine:
     def __init__(self, n_instances: int, pool_tokens: int,
                  cfg: EngineConfig = EngineConfig(),
@@ -87,16 +148,25 @@ class ServingEngine:
         self.instances = [Instance(i, pod=i // ipp)
                           for i in range(n_instances)]
         self.log: List[DispatchRecord] = []
+        self.stats: List[StepStats] = []
         self.step_idx = 0
+        # fabric table shared by every decide_batch call: idx 0 = intra-pod,
+        # idx 1 = cross-pod
+        self._fa = cm.FabricArrays.from_fabrics(
+            [C.fabric(cfg.intra_pod_fabric), C.fabric(cfg.cross_pod_fabric)])
 
     # -- topology -------------------------------------------------------------
 
+    def fabric_idx_between(self, a: int, b: int) -> int:
+        """0 (intra-pod) or 1 (cross-pod); the probe, not peak BW, is what
+        matters at decode (§5.5)."""
+        return 0 if self.instances[a].pod == self.instances[b].pod else 1
+
     def fabric_between(self, a: int, b: int) -> Fabric:
-        """Choose by topology; the probe, not peak BW, is what matters at
-        decode (§5.5)."""
-        if self.instances[a].pod == self.instances[b].pod:
-            return C.fabric(self.cfg.intra_pod_fabric)
-        return C.fabric(self.cfg.cross_pod_fabric)
+        name = (self.cfg.intra_pod_fabric
+                if self.fabric_idx_between(a, b) == 0
+                else self.cfg.cross_pod_fabric)
+        return C.fabric(name)
 
     # -- admission ------------------------------------------------------------
 
@@ -104,21 +174,53 @@ class ServingEngine:
                        position_base: int = 0):
         return self.store.register(chunk_id, holder, length, position_base)
 
+    # -- pool pressure ---------------------------------------------------------
+
+    def _make_resident(self, chunk_id: str, instance: int) -> bool:
+        """Replicate chunk onto instance, retiring cold replicas LRU under
+        pool pressure. Returns False when it cannot fit (replication is an
+        optimisation — never evict hotter data to force it)."""
+        chunk = self.store.lookup(chunk_id)
+        if self.store.resident_on(chunk_id, instance):
+            return True
+        need = chunk.length
+        if self.store.capacity_left(instance) < need:
+            victims = sorted(
+                self.store.replicas_on(instance),
+                key=lambda cid: self.store.lookup(cid).last_access)
+            for vic in victims:
+                if self.store.lookup(vic).last_access >= chunk.last_access:
+                    break          # nothing colder than the newcomer
+                self.store.evict_replica(vic, instance)
+                self._evictions_this_step += 1
+                if self.store.capacity_left(instance) >= need:
+                    break
+        if self.store.capacity_left(instance) < need:
+            return False
+        self.store.add_replica(chunk_id, instance)
+        return True
+
     # -- scheduling one decode step --------------------------------------------
 
     def schedule_step(self, requests: List[Request]) -> List[DispatchRecord]:
-        """Plan all transports for one global decode step: per-chunk
-        predicate, cross-request batching per holder, fan-in capping,
-        replica spawning."""
+        """Plan all transports for one global decode step: batched
+        predicate, per-(holder, chunk, fabric) dispatch batching, link
+        congestion pricing, fan-in capping, replica persistence."""
+        t_wall0 = time.perf_counter()
         self.step_idx += 1
-        # group (holder, chunk) -> [(request, decision)]
-        groups: Dict[Tuple[int, str], List[Tuple[Request, P.Decision]]] = \
-            defaultdict(list)
+        self._evictions_this_step = 0
+        replicas_spawned = 0
         records: List[DispatchRecord] = []
+        pairs: List[_Pair] = []
+        n_resident = 0
+        n_pairs = 0
 
+        # -- phase 1: residency resolution ---------------------------------
         for rq in requests:
             for cid in rq.chunk_ids:
+                n_pairs += 1
                 chunk = self.store.lookup(cid)
+                self.store.touch(cid, self.step_idx)
                 holders = [h for h in self.store.holders_of(cid)
                            if self.instances[h].alive]
                 if not holders:
@@ -126,85 +228,210 @@ class ServingEngine:
                     # the requester so subsequent steps serve it normally
                     records.append(DispatchRecord(
                         self.step_idx, rq.home, "local", cid, 1, rq.m_q,
-                        cm.t_local(chunk.length)))
-                    self.store.allocate(rq.home, chunk.length)
-                    chunk.holder = rq.home
+                        cm.t_local(chunk.length,
+                                   self.cfg.payload.n_layers)
+                        * self.instances[rq.home].slowdown))
+                    if self.store.capacity_left(rq.home) >= chunk.length:
+                        self.store.allocate(rq.home, chunk.length)
+                        chunk.holder = rq.home
                     continue
-                # nearest live holder by fabric probe
-                holder = min(holders, key=lambda h: self.fabric_between(
-                    rq.home, h).t_probe_s if h != rq.home else 0.0)
+                # nearest live holder by fabric probe (home wins if resident)
+                holder = min(holders, key=lambda h: 0.0 if h == rq.home
+                             else self.fabric_between(rq.home, h).t_probe_s)
                 if holder == rq.home:
+                    n_resident += 1
                     continue          # resident: free local attention
-                dec = P.decide(P.Request(
-                    m_q=rq.m_q, c_t=chunk.length,
-                    fabric=self.fabric_between(rq.home, holder),
-                    payload=self.cfg.payload,
-                    expected_reuse_steps=rq.expected_reuse_steps,
-                    k_selected=rq.k_selected,
-                    n_holders=len(holders)))
-                groups[(holder, cid)].append((rq, dec))
+                fi = self.fabric_idx_between(rq.home, holder)
+                pairs.append(_Pair(rq, cid, holder, fi,
+                                   chunk.length, len(holders)))
 
-        # cross-request dispatcher batching + fan-in capping
-        for (holder, cid), entries in groups.items():
-            primitive = self._majority_primitive(entries)
-            n_req = len(entries)
-            if primitive == "route" and n_req > self.cfg.fanin_cap:
-                # beyond the elbow: spawn a replica (amortised FETCH) for
-                # the overflow and rebalance (§6.3 replication boundary)
-                overflow = entries[self.cfg.fanin_cap:]
-                entries = entries[: self.cfg.fanin_cap]
-                replica = self._spawn_replica(cid, overflow)
-                records.append(replica)
-                n_req = len(entries)
-            m_q_total = sum(rq.m_q for rq, _ in entries)
-            fab = self.fabric_between(entries[0][0].home, holder)
+        # -- phase 2: one vectorized predicate over all pairs ---------------
+        if pairs:
+            batch = P.RequestBatch(
+                fabrics=self._fa,
+                m_q=np.array([p.rq.m_q for p in pairs], np.int64),
+                c_t=np.array([p.c_t for p in pairs], np.int64),
+                fabric_idx=np.array([p.fabric_idx for p in pairs], np.int64),
+                expected_reuse_steps=np.array(
+                    [p.rq.expected_reuse_steps for p in pairs], np.int64),
+                k_selected=np.array(
+                    [-1 if p.rq.k_selected is None else p.rq.k_selected
+                     for p in pairs], np.int64),
+                n_holders=np.array([p.n_holders for p in pairs], np.int64),
+                position_delta=np.ones(len(pairs), np.int64),
+                holder_can_compute=np.ones(len(pairs), bool),
+                host_overhead=np.zeros(len(pairs), bool),
+                payload=self.cfg.payload)
+            # link subscription (§8): one batched dispatch per
+            # (holder, chunk, fabric) group = one flow on the
+            # (holder, fabric) link
+            group_keys = [(p.holder, p.chunk_id, p.fabric_idx) for p in pairs]
+            flows_per_link: Dict[Tuple[int, int], int] = defaultdict(int)
+            for key in set(group_keys):
+                flows_per_link[(key[0], key[2])] += 1
+            k_flows = np.array(
+                [flows_per_link[(p.holder, p.fabric_idx)] for p in pairs],
+                np.int64)
+            dec = P.decide_batch(
+                batch, k_flows if self.cfg.congestion_aware else None)
+        else:
+            group_keys, k_flows, dec = [], None, None
+
+        # -- phase 3: dispatch batching + fan-in + persistence --------------
+        groups: Dict[Tuple[int, str, int], List[int]] = defaultdict(list)
+        for i, key in enumerate(group_keys):
+            groups[key].append(i)
+        # fan-in cap is a property of the HOLDER's compute elbow: per
+        # (holder, chunk) at most fanin_cap requesters route, ACROSS fabric
+        # sub-groups — a shared budget drained as dispatches are planned
+        route_budget: Dict[Tuple[int, str], int] = defaultdict(
+            lambda: self.cfg.fanin_cap)
+
+        for (holder, cid, fi), idxs in sorted(groups.items(),
+                                              key=lambda kv: kv[0][:2]):
+            entries = [pairs[i] for i in idxs]
+            votes = defaultdict(int)
+            for i in idxs:
+                votes[int(dec.code[i])] += 1
+            code = max(votes, key=votes.get)
+            primitive = P.PRIMITIVE_BY_CODE[code].value
             if primitive == "route":
-                cost = cm.t_route(fab, m_q_total, self.cfg.payload)
-            elif primitive == "fetch":
-                cost = cm.t_fetch(fab, self.store.lookup(cid).length,
-                                  self.cfg.payload)
-            else:
-                cost = cm.t_local(self.store.lookup(cid).length)
+                keep = min(len(idxs), max(0, route_budget[(holder, cid)]))
+                if keep < len(idxs):
+                    # beyond the elbow: spawn a replica (amortised FETCH)
+                    # for the overflow and rebalance (§6.3 boundary)
+                    overflow, idxs = idxs[keep:], idxs[:keep]
+                    rep = self._spawn_replica(
+                        cid, [pairs[i] for i in overflow])
+                    if rep is not None:
+                        records.append(rep)
+                        replicas_spawned += 1
+                    else:          # no room anywhere: keep them on the batch
+                        idxs = idxs + overflow
+                    entries = [pairs[i] for i in idxs]
+                    if not entries:
+                        continue
+                # clamp at 0: a failed replica spawn can overdraw the
+                # budget, but a negative balance must not leak into the
+                # NEXT sub-group's slice arithmetic
+                route_budget[(holder, cid)] = max(
+                    0, route_budget[(holder, cid)] - len(entries))
+            n_req = len(entries)
+            m_q_total = sum(p.rq.m_q for p in entries)
+            fab = C.fabric(self._fa.names[fi])
+            chunk = self.store.lookup(cid)
+            if primitive == "local":
+                # re-prefill runs at each REQUESTER, not the holder: one
+                # dispatch per requesting home, at that home's speed, and
+                # no transport => no straggler backup
+                by_home: Dict[int, List[_Pair]] = defaultdict(list)
+                for p in entries:
+                    by_home[p.rq.home].append(p)
+                for home, ps in sorted(by_home.items()):
+                    records.append(DispatchRecord(
+                        self.step_idx, home, "local", cid, len(ps),
+                        sum(p.rq.m_q for p in ps),
+                        cm.t_local(chunk.length,
+                                   self.cfg.payload.n_layers)
+                        * self.instances[home].slowdown))
+                continue
+            if primitive == "route":
+                kf = (int(k_flows[idxs[0]])
+                      if self.cfg.congestion_aware else 0)
+                # same formula the predicate priced the pairs with
+                cost = cm.t_route_congested_full(fab, m_q_total, kf,
+                                                 self.cfg.payload)
+            else:                  # fetch
+                raw = cm.t_fetch(fab, chunk.length, self.cfg.payload)
+                persisted = False
+                if self.cfg.persist_fetches:
+                    dest = self._busiest_home(entries)
+                    persisted = self._make_resident(cid, dest)
+                if persisted:
+                    # amortised exactly as the predicate priced it (§5.5
+                    # rule 2): the pull+splice is paid once and the copy
+                    # stays resident for the reuse horizon
+                    reuse = max(p.rq.expected_reuse_steps for p in entries)
+                    cost = raw / max(1, reuse)
+                else:
+                    # the copy could not persist (pool pressure or
+                    # persistence off): the pull+splice really is paid
+                    # every time, so no amortisation discount
+                    cost = raw
             cost *= self.instances[holder].slowdown
-            rec = DispatchRecord(self.step_idx, holder, primitive, cid,
-                                 n_req, m_q_total, cost)
-            records.append(rec)
+            records.append(DispatchRecord(self.step_idx, holder, primitive,
+                                          cid, n_req, m_q_total, cost))
             # straggler mitigation: fire a backup to a replica if the
             # holder's (simulated) latency blows the p99 deadline
-            nominal = cost / self.instances[holder].slowdown
             if (self.instances[holder].slowdown
                     >= self.cfg.straggler_p99_factor):
                 alt = [h for h in self.store.holders_of(cid)
                        if h != holder and self.instances[h].alive]
                 if alt:
-                    fab2 = self.fabric_between(entries[0][0].home, alt[0])
+                    # the least-loaded live replica — backing up onto
+                    # another straggler helps nobody
+                    tgt = min(alt, key=lambda h: self.instances[h].slowdown)
+                    fab2 = self.fabric_between(entries[0].rq.home, tgt)
+                    backup_cost = (
+                        cm.t_route(fab2, m_q_total, self.cfg.payload)
+                        if primitive == "route"
+                        else cm.t_fetch(fab2, chunk.length, self.cfg.payload)
+                    ) * self.instances[tgt].slowdown
                     records.append(DispatchRecord(
-                        self.step_idx, alt[0], primitive, cid, n_req,
-                        m_q_total,
-                        cm.t_route(fab2, m_q_total, self.cfg.payload),
-                        backup=True))
+                        self.step_idx, tgt, primitive, cid, n_req,
+                        m_q_total, backup_cost, backup=True))
+
         self.log.extend(records)
+        prim_counts: Dict[str, int] = defaultdict(int)
+        for r in records:
+            if not r.backup:
+                prim_counts[r.primitive] += 1
+        self.stats.append(StepStats(
+            step=self.step_idx, n_requests=len(requests), n_pairs=n_pairs,
+            n_priced=len(pairs), n_resident=n_resident,
+            n_dispatches=sum(1 for r in records if not r.backup),
+            primitives=dict(prim_counts),
+            latency_s=_critical_path(records),
+            sched_wall_s=time.perf_counter() - t_wall0,
+            replicas_spawned=replicas_spawned,
+            evictions=self._evictions_this_step))
         return records
 
-    def _majority_primitive(self, entries) -> str:
-        votes = defaultdict(int)
-        for _, dec in entries:
-            votes[dec.primitive.value] += 1
-        return max(votes, key=votes.get)
+    # -- multi-step driver -----------------------------------------------------
 
-    def _spawn_replica(self, cid: str, overflow) -> DispatchRecord:
+    def run(self, trace: Iterable[List[Request]],
+            max_steps: Optional[int] = None) -> List[StepStats]:
+        """Drive the scheduler over a trace (an iterable of per-step request
+        lists, e.g. repro.serving.workload.agentic_trace). Returns the
+        StepStats of the steps executed this call."""
+        start = len(self.stats)
+        for i, step_requests in enumerate(trace):
+            if max_steps is not None and i >= max_steps:
+                break
+            self.schedule_step(step_requests)
+        return self.stats[start:]
+
+    # -- internals -------------------------------------------------------------
+
+    def _busiest_home(self, entries: List[_Pair]) -> int:
+        by_home: Dict[int, int] = defaultdict(int)
+        for p in entries:
+            by_home[p.rq.home] += p.rq.m_q
+        return max(by_home, key=by_home.get)
+
+    def _spawn_replica(self, cid: str,
+                       overflow: List[_Pair]) -> Optional[DispatchRecord]:
         """Amortised FETCH: replicate the chunk onto the requester instance
-        with the most overflow demand."""
-        by_home = defaultdict(int)
-        for rq, _ in overflow:
-            by_home[rq.home] += rq.m_q
-        target = max(by_home, key=by_home.get)
+        with the most overflow demand. None when pool pressure wins."""
+        target = self._busiest_home(overflow)
         chunk = self.store.lookup(cid)
         fab = self.fabric_between(target, chunk.holder)
-        self.store.add_replica(cid, target)
-        return DispatchRecord(self.step_idx, target, "fetch_replica", cid,
-                              len(overflow), sum(m for m in by_home.values()),
-                              cm.t_fetch(fab, chunk.length, self.cfg.payload))
+        if not self._make_resident(cid, target):
+            return None
+        return DispatchRecord(
+            self.step_idx, target, "fetch_replica", cid, len(overflow),
+            sum(p.rq.m_q for p in overflow),
+            cm.t_fetch(fab, chunk.length, self.cfg.payload))
 
     # -- faults ---------------------------------------------------------------
 
@@ -218,17 +445,7 @@ class ServingEngine:
     # -- metrics ---------------------------------------------------------------
 
     def step_latency(self, step: int) -> float:
-        """Critical-path latency of one step: max over primary dispatches,
-        where a backup caps its primary's contribution."""
-        primaries = [r for r in self.log
-                     if r.step == step and not r.backup]
-        backups = {(r.holder, r.chunk_id): r for r in self.log
-                   if r.step == step and r.backup}
-        worst = 0.0
-        for r in primaries:
-            cost = r.est_cost_s
-            for b in backups.values():
-                if b.chunk_id == r.chunk_id:
-                    cost = min(cost, b.est_cost_s)
-            worst = max(worst, cost)
-        return worst
+        """Critical-path latency of a past step, from the dispatch log.
+        (schedule_step computes the current step's latency from its own
+        records — this scan is for post-hoc queries only.)"""
+        return _critical_path([r for r in self.log if r.step == step])

@@ -18,6 +18,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.merge import Partial
 from repro.core.routing import (route_fanout, route_pairwise,
                                 route_pairwise_tpla, route_ring)
@@ -62,7 +63,7 @@ def test_fanout_and_ring():
     specs = (P("instance"), P("instance"), P("instance"))
     out_specs = Partial(o=P("instance"), m=P("instance"), l=P("instance"))
     for name, fn in (("fanout", fan), ("ring", ring)):
-        shmapped = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=specs,
+        shmapped = jax.jit(compat.shard_map(fn, mesh=mesh, in_specs=specs,
                                          out_specs=out_specs))
         got = shmapped(q_abs, ckv, valid)
         want = M.absorbed_partial(CFG, q_abs, ckv)
@@ -77,7 +78,7 @@ def test_fanout_and_ring():
     owner = rng.randint(0, NI, S)
     valid_scattered = jnp.asarray(
         (owner == (np.arange(S) // S_LOCAL)))   # each owns subset of own range
-    shmapped = jax.jit(jax.shard_map(fan, mesh=mesh, in_specs=specs,
+    shmapped = jax.jit(compat.shard_map(fan, mesh=mesh, in_specs=specs,
                                      out_specs=out_specs))
     got = shmapped(q_abs, ckv, valid_scattered)
     want = M.absorbed_partial(CFG, q_abs, ckv,
@@ -99,7 +100,7 @@ def test_pairwise():
                               requester=requester, axis="instance")
 
     out_specs = Partial(o=P("instance"), m=P("instance"), l=P("instance"))
-    shmapped = jax.jit(jax.shard_map(pw, mesh=mesh,
+    shmapped = jax.jit(compat.shard_map(pw, mesh=mesh,
                                      in_specs=(P("instance"), P("instance")),
                                      out_specs=out_specs))
     got = shmapped(q_abs, ckv)
@@ -141,7 +142,7 @@ def test_tpla_rank_pairing():
                                    instance_axis="instance", tp_axis="tp")
         return part.o[None, None], part.m[None, None], part.l[None, None]
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(compat.shard_map(
         tpla, mesh=mesh,
         in_specs=(P("instance", "tp"), P("instance", "tp")),
         out_specs=(P("instance", "tp", None, None, None),
@@ -173,7 +174,7 @@ def test_tpla_rank_pairing():
                              (2, NTP) + q_abs[:B].shape)
     c_rep = jnp.broadcast_to(holder_cache[None, None],
                              (2, NTP) + holder_cache.shape)
-    fn2 = jax.jit(jax.shard_map(
+    fn2 = jax.jit(compat.shard_map(
         plain, mesh=mesh1,
         in_specs=(P("instance", "tp"), P("instance", "tp")),
         out_specs=(P("instance", "tp", None, None, None),

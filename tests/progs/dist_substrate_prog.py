@@ -18,14 +18,14 @@ import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.checkpoint.manager import CheckpointManager
 from repro.distributed.hlo_costs import analyse_hlo
 from repro.optim.compress import compressed_psum_with_feedback
 
 
 def mk_mesh(shape, axes):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def test_elastic_checkpoint():
@@ -63,7 +63,9 @@ def test_compressed_dp_parity():
             else:
                 g = lax.pmean(g, "pod")
             return w - 0.05 * g, e
-        return jax.jit(jax.shard_map(
+        # unchecked: old jax cannot statically infer that the error-feedback
+        # state stays replicated through the quantize/dequantize ops
+        return jax.jit(compat.shard_map_unchecked(
             step, mesh=mesh,
             in_specs=(P(), P(), P("pod"), P("pod")),
             out_specs=(P(), P())))
@@ -74,7 +76,9 @@ def test_compressed_dp_parity():
     for mode in (False, True):
         train = make_train(mode)
         w, e = w0, e0
-        for i in range(60):
+        # 300 steps: the PRNG (and so the conditioning of X) varies across
+        # jax releases; converge well past the loosest draw's horizon
+        for i in range(300):
             w, e = train(w, e, X, y_true)
         ws[mode] = np.asarray(w)
         final = float(loss(jnp.asarray(ws[mode]), X, y_true))
@@ -100,7 +104,7 @@ def test_collective_matmul_overlap():
     w = jax.random.normal(jax.random.PRNGKey(3), (d, n))
 
     for fn in (allgather_matmul_overlapped, allgather_matmul_barrier):
-        sm = jax.jit(jax.shard_map(
+        sm = jax.jit(compat.shard_map(
             lambda xs, wb: fn(xs, wb, "tp"), mesh=mesh,
             in_specs=(P("tp", None), P(None, "tp")),
             out_specs=P("tp", None)))
@@ -108,7 +112,7 @@ def test_collective_matmul_overlap():
         np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w),
                                    rtol=2e-5, atol=2e-5)
     # the overlapped form uses ppermute (pipelined), not one big all-gather
-    sm_o = jax.jit(jax.shard_map(
+    sm_o = jax.jit(compat.shard_map(
         lambda xs, wb: allgather_matmul_overlapped(xs, wb, "tp"), mesh=mesh,
         in_specs=(P("tp", None), P(None, "tp")), out_specs=P("tp", None)))
     txt = sm_o.lower(x, w).compile().as_text()

@@ -1,0 +1,102 @@
+"""decide_batch() must agree with the scalar decide() element-wise — the
+vectorized scheduler path is only trustworthy if it IS the paper's predicate
+(§5), just evaluated in bulk. Fuzzes >= 1000 randomized (m_q, c_t, fabric,
+reuse, selection, delta, compute/host flags) points plus directed edges."""
+
+import numpy as np
+import pytest
+
+from repro.core import constants as C
+from repro.core import cost_model as cm
+from repro.core import predicate as P
+
+
+def _random_requests(rng: np.random.RandomState, n: int):
+    fabric_names = sorted(C.FABRICS)
+    reqs = []
+    for _ in range(n):
+        sel = rng.rand() < 0.3
+        reqs.append(P.Request(
+            m_q=int(rng.randint(1, 8192)),
+            c_t=int(rng.randint(1, 16384)),
+            fabric=C.fabric(fabric_names[rng.randint(len(fabric_names))]),
+            expected_reuse_steps=int(rng.choice([1, 1, 2, 8, 100, 100_000])),
+            k_selected=int(rng.choice([512, 1024, 2048])) if sel else None,
+            n_holders=int(rng.randint(1, 9)),
+            position_delta=int(rng.choice([0, 0, 1, 17, 100_000])),
+            holder_can_compute=bool(rng.rand() < 0.9),
+            host_overhead=bool(rng.rand() < 0.2)))
+    return reqs
+
+
+class TestBatchAgreesWithScalar:
+    def test_randomized_1000_points(self):
+        rng = np.random.RandomState(0)
+        reqs = _random_requests(rng, 1200)
+        batch = P.RequestBatch.from_requests(reqs)
+        dec = P.decide_batch(batch)
+        for i, r in enumerate(reqs):
+            want = P.decide(r)
+            assert dec.primitive(i) is want.primitive, (i, r)
+            np.testing.assert_allclose(dec.t_route[i], want.t_route,
+                                       rtol=1e-12)
+            np.testing.assert_allclose(dec.t_fetch[i], want.t_fetch,
+                                       rtol=1e-12)
+            np.testing.assert_allclose(dec.t_local[i], want.t_local,
+                                       rtol=1e-12)
+
+    def test_directed_edges(self):
+        ib = C.fabric("h100_ibgda")
+        edges = [
+            # the §5.5 rules of thumb, one per regime
+            P.Request(m_q=256, c_t=2048, fabric=ib),                 # ROUTE
+            P.Request(m_q=1, c_t=2048, fabric=ib,
+                      expected_reuse_steps=100_000),                 # FETCH
+            P.Request(m_q=1, c_t=30, fabric=ib,
+                      holder_can_compute=False),                     # LOCAL
+            P.Request(m_q=256, c_t=2048, fabric=ib,
+                      k_selected=2048, n_holders=7),                 # §5.4
+            P.Request(m_q=256, c_t=2048, fabric=ib, position_delta=0,
+                      host_overhead=True),                           # §5.3
+            P.Request(m_q=256, c_t=2048, fabric=ib, k_selected=2048,
+                      n_holders=1),        # selection, single holder
+        ]
+        batch = P.RequestBatch.from_requests(edges)
+        dec = P.decide_batch(batch)
+        for i, r in enumerate(edges):
+            assert dec.primitive(i) is P.decide(r).primitive, r
+
+    def test_empty_batch(self):
+        batch = P.RequestBatch.from_requests([])
+        dec = P.decide_batch(batch)
+        assert len(batch) == 0 and dec.code.shape == (0,)
+
+    def test_mixed_payload_rejected(self):
+        other = cm.payload_for(d_qk=128, d_v=128, n_layers=32)
+        with pytest.raises(ValueError):
+            P.RequestBatch.from_requests([
+                P.Request(m_q=1, c_t=10, fabric=C.fabric("tpu_ici")),
+                P.Request(m_q=1, c_t=10, fabric=C.fabric("tpu_ici"),
+                          payload=other)])
+
+
+class TestCongestedPricing:
+    def test_kflows_flat_through_2_then_rises(self):
+        ib = C.fabric("h100_ibgda")
+        reqs = [P.Request(m_q=1024, c_t=2048, fabric=ib) for _ in range(3)]
+        batch = P.RequestBatch.from_requests(reqs)
+        t = P.route_cost_batch(batch, k_flows=np.array([1, 2, 3]))
+        assert t[1] == pytest.approx(t[0], rel=1e-9)
+        # §8: +119% on transport at K=3 => >1.5x even with the flat
+        # compute+merge terms folded in
+        assert t[2] > 1.5 * t[1]
+
+    def test_congested_matches_scalar_congested(self):
+        ib = C.fabric("h100_ibgda")
+        for k in (0, 1, 2, 3, 5):
+            reqs = [P.Request(m_q=512, c_t=2048, fabric=ib)]
+            batch = P.RequestBatch.from_requests(reqs)
+            got = P.route_cost_batch(batch, k_flows=np.array([k]))[0]
+            want = (cm.t_route_congested(ib, 512, k)
+                    + np.mean(C.HOLDER_COMPUTE_DECODE_S) + C.MERGE_COST_S)
+            np.testing.assert_allclose(got, want, rtol=1e-12)
