@@ -329,6 +329,80 @@ def t_route_congested_full_batch(fa: FabricArrays, fabric_idx: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Per-stage breakdowns (§4: T_probe / T_transfer / T_compute / T_return /
+# T_merge). The serving timeline (repro.serving.timeline) consumes these:
+# each breakdown is an ordered tuple of (stage_name, seconds) whose durations
+# sum to the corresponding closed-form price above, so a one-flow timeline IS
+# the scalar cost model. k_flows prices the wire stages under the §8 closed
+# form; the timeline passes 0 (uncontended) because there queueing is
+# *simulated* — flows serialize on the shared link — rather than priced.
+# ---------------------------------------------------------------------------
+
+StageList = Tuple[Tuple[str, float], ...]
+
+
+def route_stages(fabric: Fabric, m_q: int, k_flows: int = 0,
+                 payload: Payload = MLA_PAYLOAD,
+                 t_compute: float = np.mean(C.HOLDER_COMPUTE_DECODE_S),
+                 t_merge: float = C.MERGE_COST_S,
+                 t_host: float = 0.0) -> StageList:
+    """ROUTE as the paper's five stages. transfer carries the query rows out,
+    return carries the partials back; together they are the t_route_transport
+    round trip, so the stage sum equals t_route_congested_full + t_host."""
+    probe_mult = C.CONGESTION_PROBE_MULT.get(min(k_flows, 3), 1.0)
+    bw = fabric.bw_Bps / (k_flows - 1) if k_flows >= 3 else fabric.bw_Bps
+    stages = [
+        ("probe", fabric.t_probe_s * probe_mult),
+        ("transfer", m_q * payload.q_bytes / bw),
+        ("compute", float(t_compute)),
+        ("return", m_q * payload.p_bytes / bw),
+        ("merge", float(t_merge)),
+    ]
+    if t_host:
+        stages.append(("host", float(t_host)))
+    return tuple(stages)
+
+
+def fetch_stages(fabric: Fabric, c_t: int, payload: Payload = MLA_PAYLOAD,
+                 contiguous: bool = True, reuse_steps: int = 1) -> StageList:
+    """FETCH as bulk pull + position splice, each amortised over the reuse
+    horizon (§5.5 rule 2) so the stage sum equals t_fetch / reuse_steps."""
+    r = max(1, reuse_steps)
+    stages = [("pull", t_pull(fabric, c_t, payload) / r)]
+    if contiguous:
+        stages.append(("splice", t_splice(c_t) / r))
+    return tuple(stages)
+
+
+def fetch_scattered_stages(fabric: Fabric, k_selected: int, n_holders: int,
+                           payload: Payload = MLA_PAYLOAD,
+                           per_holder_handshake_s: float = 180e-6
+                           ) -> StageList:
+    """Scattered gather (§5.4) as one wire stage: the per-holder transfers
+    are serial at the dispatch rate, so there is no overlap to expose."""
+    return (("gather", t_fetch_scattered(fabric, k_selected, n_holders,
+                                         payload, per_holder_handshake_s)),)
+
+
+def local_stages(c_t: int, n_layers: int = C.V2_LITE_LAYERS,
+                 c_per_token_layer: float = C.PREFILL_PER_TOKEN_LAYER_MID_S
+                 ) -> StageList:
+    """LOCAL re-prefill: one compute stage on the requester, no wire."""
+    return (("prefill", t_local(c_t, n_layers, c_per_token_layer)),)
+
+
+def scale_stages(stages: StageList, factor: float) -> StageList:
+    """Scale every stage duration (holder/requester slowdown)."""
+    if factor == 1.0:
+        return stages
+    return tuple((name, dur * factor) for name, dur in stages)
+
+
+def stages_total_s(stages: StageList) -> float:
+    return sum(d for _, d in stages)
+
+
+# ---------------------------------------------------------------------------
 # Model-fit diagnostics (§4.3): MAPE of the affine model vs measurements.
 # ---------------------------------------------------------------------------
 

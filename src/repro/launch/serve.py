@@ -43,7 +43,7 @@ def main():
         kinds = {}
         for r in recs:
             kinds[r.primitive] = kinds.get(r.primitive, 0) + 1
-        print(f"[serve] step {step}: {kinds}, critical path "
+        print(f"[serve] step {step}: {kinds}, makespan "
               f"{eng.step_latency(eng.step_idx)*1e6:.0f}us")
     n_route = sum(1 for r in eng.log if r.primitive == "route")
     print(f"[serve] total dispatches {len(eng.log)}; "

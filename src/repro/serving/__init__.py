@@ -1,4 +1,7 @@
 from repro.serving.engine import (DispatchRecord, EngineConfig, Instance,
-                                  Request, ServingEngine, StepStats)
+                                  Request, ServingEngine, StepStats,
+                                  build_timeline, transport_latencies)
+from repro.serving.timeline import (Flow, ScheduledStage, Stage, Timeline,
+                                    simulate, transport_flow)
 from repro.serving.workload import (WorkloadConfig, agentic_trace,
                                     register_corpus)

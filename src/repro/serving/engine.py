@@ -10,7 +10,17 @@ The scheduler is vectorized and multi-step. Per decode step it:
     DCN — probe latency, not peak bandwidth, §5.5);
   * prices ROUTE under link subscription: concurrent batched dispatches
     sharing a (holder, fabric) link pay t_route_congested (§8) — at K>=3
-    flows the predicate itself can flip decode traffic to FETCH;
+    flows the predicate itself can flip decode traffic to FETCH. The
+    k_flows fed to the predicate is DERIVED from observed link occupancy
+    (an uncontended pass decides provisional primitives; only groups that
+    actually elect a transport occupy their link), not assumed from raw
+    group counts;
+  * schedules every step on an overlap-aware transport timeline
+    (repro.serving.timeline): wire stages serialize per (link, fabric),
+    holder compute is charged per-instance occupancy, independent stages
+    overlap — StepStats.latency_s is the MAKESPAN of that schedule, not a
+    max of independent prices (so congestion and fabric sharing are
+    visible in the simulated latency);
   * batches cross-request dispatches per (holder, chunk, fabric) — one
     dispatch per holder per fabric (the §5.3 reduction, without the seed
     bug of pricing a cross-pod requester at the first entry's fabric);
@@ -44,6 +54,7 @@ from repro.core import cost_model as cm
 from repro.core import predicate as P
 from repro.core.chunk_store import ChunkStore
 from repro.core.constants import Fabric
+from repro.serving import timeline as TL
 
 
 @dataclasses.dataclass
@@ -87,6 +98,13 @@ class DispatchRecord:
     m_q_total: int
     est_cost_s: float
     backup: bool = False
+    # timeline inputs: which wire the dispatch occupies (link_instance < 0
+    # means no wire — LOCAL), the requester-side instance for merge/splice,
+    # and the §4 per-stage breakdown the est_cost_s sums over
+    fabric_idx: int = -1
+    link_instance: int = -1
+    home: int = -1
+    stages: cm.StageList = ()
 
 
 @dataclasses.dataclass
@@ -99,10 +117,16 @@ class StepStats:
     n_resident: int                # served by local attention, no transport
     n_dispatches: int              # primary dispatches issued
     primitives: Dict[str, int]
-    latency_s: float               # simulated critical path of the step
+    latency_s: float               # makespan of the step's transport timeline
     sched_wall_s: float            # scheduler wall-clock for this step
     replicas_spawned: int = 0
     evictions: int = 0
+    # timeline telemetry: the old independent max-reduce price (what PR 1
+    # reported as latency), the serial sum of every stage, and the summed
+    # duration per stage name
+    max_dispatch_s: float = 0.0
+    serial_stage_s: float = 0.0
+    stage_totals: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def decisions_per_sec(self) -> float:
@@ -110,21 +134,84 @@ class StepStats:
         the predicate and are excluded)."""
         return self.n_priced / self.sched_wall_s if self.sched_wall_s else 0.0
 
+    @property
+    def has_transport(self) -> bool:
+        """False for a fully-resident step: nothing was scheduled, so the
+        0.0 makespan is not a latency any request experienced."""
+        return self.n_dispatches > 0
+
+    @property
+    def overlap_efficiency(self) -> float:
+        """makespan / sum-of-stages (1.0 = fully serial, 1/n = n flows
+        perfectly overlapped; 1.0 for an empty step)."""
+        return (self.latency_s / self.serial_stage_s
+                if self.serial_stage_s > 0 else 1.0)
+
+
+def transport_latencies(stats: Iterable[StepStats]) -> np.ndarray:
+    """Latencies of the steps that actually dispatched work. Fully-resident
+    steps have an empty schedule (latency 0.0); including them would deflate
+    p50/p99 with zeros nobody waited for — aggregation must skip them."""
+    return np.array([s.latency_s for s in stats if s.has_transport],
+                    np.float64)
+
+
+def _backup_of(records: List["DispatchRecord"],
+               i: int) -> Optional["DispatchRecord"]:
+    """The straggler backup shadowing records[i], if any. schedule_step
+    emits a backup IMMEDIATELY after its primary, so adjacency — not
+    chunk_id alone — is the association: two fabric groups of one chunk
+    each carry their own backup and must not cap each other."""
+    nxt = i + 1
+    if nxt < len(records) and records[nxt].backup \
+            and records[nxt].chunk_id == records[i].chunk_id:
+        return records[nxt]
+    return None
+
 
 def _critical_path(records: List["DispatchRecord"]) -> float:
-    """Critical-path latency of one step's records: max over primary
-    dispatches, where a backup caps its primary's contribution."""
-    backups = [r for r in records if r.backup]
+    """Independent max-reduce price of one step's records: max over primary
+    dispatches, where a backup caps its own primary's contribution. Through
+    PR 1 this WAS the step latency; it is kept as StepStats.max_dispatch_s —
+    the no-contention floor the timeline makespan is compared against."""
     worst = 0.0
-    for r in records:
+    for i, r in enumerate(records):
         if r.backup:
             continue
         cost = r.est_cost_s
-        for b in backups:
-            if b.chunk_id == r.chunk_id:
-                cost = min(cost, b.est_cost_s)
+        b = _backup_of(records, i)
+        if b is not None:
+            cost = min(cost, b.est_cost_s)
         worst = max(worst, cost)
     return worst
+
+
+def build_timeline(records: List["DispatchRecord"]) -> TL.Timeline:
+    """One step's dispatch records as an overlap-aware schedule.
+
+    A straggler backup replaces its own primary (adjacent record) when it
+    is the cheaper path (the engine cancels the primary at the p99
+    deadline — modeled as the faster of the two serving the chunk),
+    mirroring _critical_path's min. Wire stages bind to the dispatch's
+    (link_instance, fabric) resource, compute to the holder's SM,
+    merge/splice/prefill to the requester's."""
+    flows: List[TL.Flow] = []
+    for i, r in enumerate(records):
+        if r.backup:
+            continue
+        b = _backup_of(records, i)
+        eff = b if b is not None and b.est_cost_s < r.est_cost_s else r
+        if not eff.stages:
+            continue
+        link_res = (TL.link(eff.link_instance, eff.fabric_idx)
+                    if eff.link_instance >= 0 else None)
+        requester = eff.home if eff.home >= 0 else eff.holder
+        flows.append(TL.transport_flow(
+            f"{eff.primitive}:{eff.chunk_id}@{eff.holder}#{i}",
+            eff.stages, link_res=link_res,
+            holder_sm=TL.sm(eff.holder), requester_sm=TL.sm(requester),
+            primitive=eff.primitive, chunk_id=eff.chunk_id))
+    return TL.simulate(flows)
 
 
 # one resolved (request, chunk) access, pre-decision
@@ -149,6 +236,7 @@ class ServingEngine:
                           for i in range(n_instances)]
         self.log: List[DispatchRecord] = []
         self.stats: List[StepStats] = []
+        self.timelines: List[TL.Timeline] = []   # parallel to self.stats
         self.step_idx = 0
         # fabric table shared by every decide_batch call: idx 0 = intra-pod,
         # idx 1 = cross-pod
@@ -226,11 +314,15 @@ class ServingEngine:
                 if not holders:
                     # orphaned: LOCAL re-prefill, then re-home the chunk to
                     # the requester so subsequent steps serve it normally
+                    sd = self.instances[rq.home].slowdown
                     records.append(DispatchRecord(
                         self.step_idx, rq.home, "local", cid, 1, rq.m_q,
                         cm.t_local(chunk.length,
-                                   self.cfg.payload.n_layers)
-                        * self.instances[rq.home].slowdown))
+                                   self.cfg.payload.n_layers) * sd,
+                        home=rq.home,
+                        stages=cm.scale_stages(
+                            cm.local_stages(chunk.length,
+                                            self.cfg.payload.n_layers), sd)))
                     if self.store.capacity_left(rq.home) >= chunk.length:
                         self.store.allocate(rq.home, chunk.length)
                         chunk.holder = rq.home
@@ -264,16 +356,24 @@ class ServingEngine:
                 payload=self.cfg.payload)
             # link subscription (§8): one batched dispatch per
             # (holder, chunk, fabric) group = one flow on the
-            # (holder, fabric) link
+            # (holder, fabric) link. The k_flows premium is DERIVED from
+            # observed occupancy, not assumed from raw group counts: an
+            # uncontended pass decides provisional primitives, only groups
+            # that elect a transport (ROUTE/FETCH) occupy their link, and
+            # the observed per-link flow count re-prices the batch. (One
+            # relaxation round: a group the congested pass flips to LOCAL
+            # still counts toward the occupancy its neighbours saw.)
             group_keys = [(p.holder, p.chunk_id, p.fabric_idx) for p in pairs]
-            flows_per_link: Dict[Tuple[int, int], int] = defaultdict(int)
-            for key in set(group_keys):
-                flows_per_link[(key[0], key[2])] += 1
-            k_flows = np.array(
-                [flows_per_link[(p.holder, p.fabric_idx)] for p in pairs],
-                np.int64)
-            dec = P.decide_batch(
-                batch, k_flows if self.cfg.congestion_aware else None)
+            if self.cfg.congestion_aware:
+                dec0 = P.decide_batch(batch, None)
+                k_flows = self._occupancy_k_flows(pairs, group_keys, dec0)
+                # the §8 premium is flat through K<=2: re-pricing is the
+                # identity unless some link is actually subscribed past
+                # the knee — skip the second pass in the common case
+                dec = (P.decide_batch(batch, k_flows)
+                       if int(k_flows.max()) >= 3 else dec0)
+            else:
+                k_flows, dec = None, P.decide_batch(batch, None)
         else:
             group_keys, k_flows, dec = [], None, None
 
@@ -328,24 +428,33 @@ class ServingEngine:
                 for p in entries:
                     by_home[p.rq.home].append(p)
                 for home, ps in sorted(by_home.items()):
+                    sd = self.instances[home].slowdown
                     records.append(DispatchRecord(
                         self.step_idx, home, "local", cid, len(ps),
                         sum(p.rq.m_q for p in ps),
                         cm.t_local(chunk.length,
-                                   self.cfg.payload.n_layers)
-                        * self.instances[home].slowdown))
+                                   self.cfg.payload.n_layers) * sd,
+                        home=home,
+                        stages=cm.scale_stages(
+                            cm.local_stages(chunk.length,
+                                            self.cfg.payload.n_layers), sd)))
                 continue
+            # timeline stage durations are UNCONTENDED (k=0): on the
+            # timeline, §8 queueing is simulated — flows serialize on the
+            # shared (link, fabric) resource — while est_cost_s keeps the
+            # congested closed form the predicate priced the pairs with
+            dest = self._busiest_home(entries)
             if primitive == "route":
                 kf = (int(k_flows[idxs[0]])
                       if self.cfg.congestion_aware else 0)
                 # same formula the predicate priced the pairs with
                 cost = cm.t_route_congested_full(fab, m_q_total, kf,
                                                  self.cfg.payload)
+                stages = cm.route_stages(fab, m_q_total, 0, self.cfg.payload)
             else:                  # fetch
                 raw = cm.t_fetch(fab, chunk.length, self.cfg.payload)
                 persisted = False
                 if self.cfg.persist_fetches:
-                    dest = self._busiest_home(entries)
                     persisted = self._make_resident(cid, dest)
                 if persisted:
                     # amortised exactly as the predicate priced it (§5.5
@@ -357,10 +466,16 @@ class ServingEngine:
                     # the copy could not persist (pool pressure or
                     # persistence off): the pull+splice really is paid
                     # every time, so no amortisation discount
+                    reuse = 1
                     cost = raw
-            cost *= self.instances[holder].slowdown
-            records.append(DispatchRecord(self.step_idx, holder, primitive,
-                                          cid, n_req, m_q_total, cost))
+                stages = cm.fetch_stages(fab, chunk.length, self.cfg.payload,
+                                         reuse_steps=reuse)
+            sd = self.instances[holder].slowdown
+            cost *= sd
+            records.append(DispatchRecord(
+                self.step_idx, holder, primitive, cid, n_req, m_q_total,
+                cost, fabric_idx=fi, link_instance=holder, home=dest,
+                stages=cm.scale_stages(stages, sd)))
             # straggler mitigation: fire a backup to a replica if the
             # holder's (simulated) latency blows the p99 deadline
             if (self.instances[holder].slowdown
@@ -372,29 +487,43 @@ class ServingEngine:
                     # another straggler helps nobody
                     tgt = min(alt, key=lambda h: self.instances[h].slowdown)
                     fab2 = self.fabric_between(entries[0].rq.home, tgt)
+                    fi2 = self.fabric_idx_between(entries[0].rq.home, tgt)
+                    sd2 = self.instances[tgt].slowdown
                     backup_cost = (
                         cm.t_route(fab2, m_q_total, self.cfg.payload)
                         if primitive == "route"
                         else cm.t_fetch(fab2, chunk.length, self.cfg.payload)
-                    ) * self.instances[tgt].slowdown
+                    ) * sd2
+                    backup_stages = (
+                        cm.route_stages(fab2, m_q_total, 0, self.cfg.payload)
+                        if primitive == "route"
+                        else cm.fetch_stages(fab2, chunk.length,
+                                             self.cfg.payload))
                     records.append(DispatchRecord(
                         self.step_idx, tgt, primitive, cid, n_req,
-                        m_q_total, backup_cost, backup=True))
+                        m_q_total, backup_cost, backup=True,
+                        fabric_idx=fi2, link_instance=tgt, home=dest,
+                        stages=cm.scale_stages(backup_stages, sd2)))
 
         self.log.extend(records)
         prim_counts: Dict[str, int] = defaultdict(int)
         for r in records:
             if not r.backup:
                 prim_counts[r.primitive] += 1
+        timeline = build_timeline(records)
+        self.timelines.append(timeline)
         self.stats.append(StepStats(
             step=self.step_idx, n_requests=len(requests), n_pairs=n_pairs,
             n_priced=len(pairs), n_resident=n_resident,
             n_dispatches=sum(1 for r in records if not r.backup),
             primitives=dict(prim_counts),
-            latency_s=_critical_path(records),
+            latency_s=timeline.makespan_s,
             sched_wall_s=time.perf_counter() - t_wall0,
             replicas_spawned=replicas_spawned,
-            evictions=self._evictions_this_step))
+            evictions=self._evictions_this_step,
+            max_dispatch_s=_critical_path(records),
+            serial_stage_s=timeline.serial_s,
+            stage_totals=timeline.stage_totals()))
         return records
 
     # -- multi-step driver -----------------------------------------------------
@@ -419,6 +548,28 @@ class ServingEngine:
             by_home[p.rq.home] += p.rq.m_q
         return max(by_home, key=by_home.get)
 
+    def _occupancy_k_flows(self, pairs: List[_Pair],
+                           group_keys: List[Tuple[int, str, int]],
+                           dec: "P.DecisionBatch") -> np.ndarray:
+        """Per-pair §8 k_flows from OBSERVED link occupancy: each
+        (holder, chunk, fabric) group whose (uncontended) majority vote is a
+        transport — ROUTE or FETCH both put wire stages on the link — counts
+        as one flow on its (holder, fabric) link; LOCAL groups never touch
+        the wire and must not inflate their neighbours' premium."""
+        groups: Dict[Tuple[int, str, int], List[int]] = defaultdict(list)
+        for i, key in enumerate(group_keys):
+            groups[key].append(i)
+        flows_per_link: Dict[Tuple[int, int], int] = defaultdict(int)
+        for key, idxs in groups.items():
+            votes: Dict[int, int] = defaultdict(int)
+            for i in idxs:
+                votes[int(dec.code[i])] += 1
+            if max(votes, key=votes.get) != P.LOCAL_CODE:
+                flows_per_link[(key[0], key[2])] += 1
+        return np.array(
+            [flows_per_link.get((p.holder, p.fabric_idx), 0) for p in pairs],
+            np.int64)
+
     def _spawn_replica(self, cid: str,
                        overflow: List[_Pair]) -> Optional[DispatchRecord]:
         """Amortised FETCH: replicate the chunk onto the requester instance
@@ -431,7 +582,10 @@ class ServingEngine:
         return DispatchRecord(
             self.step_idx, target, "fetch_replica", cid, len(overflow),
             sum(p.rq.m_q for p in overflow),
-            cm.t_fetch(fab, chunk.length, self.cfg.payload))
+            cm.t_fetch(fab, chunk.length, self.cfg.payload),
+            fabric_idx=self.fabric_idx_between(target, chunk.holder),
+            link_instance=chunk.holder, home=target,
+            stages=cm.fetch_stages(fab, chunk.length, self.cfg.payload))
 
     # -- faults ---------------------------------------------------------------
 
@@ -445,7 +599,17 @@ class ServingEngine:
     # -- metrics ---------------------------------------------------------------
 
     def step_latency(self, step: int) -> float:
-        """Critical-path latency of a past step, from the dispatch log.
-        (schedule_step computes the current step's latency from its own
-        records — this scan is for post-hoc queries only.)"""
+        """Timeline makespan of a past step (0.0 for a fully-resident step
+        — see transport_latencies() for why aggregation must skip those).
+        Step ids are sequential and 1-based, so this is a direct index."""
+        if 1 <= step <= len(self.stats) and self.stats[step - 1].step == step:
+            return self.stats[step - 1].latency_s
         return _critical_path([r for r in self.log if r.step == step])
+
+    def timeline_of(self, step: int) -> TL.Timeline:
+        """The overlap-aware schedule of a past step (1-based sequential
+        step ids, parallel to self.stats)."""
+        if 1 <= step <= len(self.timelines) \
+                and self.stats[step - 1].step == step:
+            return self.timelines[step - 1]
+        raise KeyError(f"no timeline recorded for step {step}")

@@ -1,0 +1,228 @@
+"""Overlap-aware transport timeline for one decode step.
+
+The cost model prices a dispatch as probe / transfer / compute / return /
+merge stages (§4); a real NIC overlaps those stages ACROSS concurrent
+flows while serializing the wire itself. The max-reduce the engine used
+through PR 1 prices each dispatch independently and takes the max, which
+makes fabric sharing invisible: four flows on one link cost the same as
+one. This module is the event simulator that replaces it:
+
+  * every dispatch becomes a Flow — an ordered list of Stages;
+  * a wire stage (probe / transfer / return / pull / gather) occupies the
+    flow's ("link", instance, fabric) resource EXCLUSIVELY: two flows never
+    overlap on the same link — queueing is simulated, not priced (§8);
+  * a compute stage occupies the holder's ("sm", instance) resource, so
+    holder-side compute is charged per-instance occupancy (the §6.3 elbow's
+    other half: a busy holder serializes its chunk groups);
+  * requester-side stages (merge / splice / prefill / host) occupy the
+    requester's SM;
+  * stages of DIFFERENT flows on DIFFERENT resources overlap freely — the
+    probe of flow B rides under the transfer of flow A.
+
+simulate() runs greedy earliest-start list scheduling (deterministic:
+ties break toward the earlier flow), which is work-conserving, so the
+makespan is bracketed by
+
+    max(flow serial time)  <=  makespan  <=  sum(all stage durations)
+
+and a single flow's makespan IS the scalar cost-model price (the stage
+durations come from cost_model.route_stages/fetch_stages/local_stages,
+which sum to the closed forms exactly). tests/test_timeline.py and
+tests/test_timeline_props.py pin these invariants down.
+
+overlap_efficiency = makespan / sum-of-stages: 1.0 means the schedule is
+fully serial (no overlap harvested); 1/n means n flows overlapped
+perfectly. Lower is better.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# ("link", instance, fabric_idx) — the shared wire anchored at an instance
+# ("sm", instance, 0)            — an instance's compute occupancy
+Resource = Tuple[str, int, int]
+
+WIRE_STAGES = frozenset({"probe", "transfer", "return", "pull", "gather"})
+HOLDER_STAGES = frozenset({"compute"})
+# merge / splice / prefill / host (and anything unknown) land requester-side
+
+
+def link(instance: int, fabric_idx: int) -> Resource:
+    """The (link, fabric) wire resource anchored at `instance` (§8: the
+    holder's NIC is what concurrent flows subscribe)."""
+    return ("link", instance, fabric_idx)
+
+
+def sm(instance: int) -> Resource:
+    """An instance's compute-occupancy resource."""
+    return ("sm", instance, 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    name: str
+    duration_s: float
+    resource: Optional[Resource] = None   # None: no shared resource
+
+
+@dataclasses.dataclass(frozen=True)
+class Flow:
+    """One dispatch as an ordered stage chain (stages run sequentially
+    within a flow; overlap happens only across flows)."""
+    key: str
+    stages: Tuple[Stage, ...]
+    primitive: str = ""
+    chunk_id: str = ""
+
+    @property
+    def serial_s(self) -> float:
+        """The flow's independent (no-contention) price: what the old
+        max-reduce charged it."""
+        return sum(s.duration_s for s in self.stages)
+
+
+def transport_flow(key: str, stages: Sequence[Tuple[str, float]], *,
+                   link_res: Optional[Resource] = None,
+                   holder_sm: Optional[Resource] = None,
+                   requester_sm: Optional[Resource] = None,
+                   primitive: str = "", chunk_id: str = "") -> Flow:
+    """Build a Flow from a cost_model stage breakdown ((name, seconds)
+    pairs), binding each stage to the wire / holder-SM / requester-SM
+    resource by stage-name class."""
+    bound: List[Stage] = []
+    for name, dur in stages:
+        if name in WIRE_STAGES:
+            res = link_res
+        elif name in HOLDER_STAGES:
+            res = holder_sm
+        else:
+            res = requester_sm
+        bound.append(Stage(name, float(dur), res))
+    return Flow(key, tuple(bound), primitive, chunk_id)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduledStage:
+    flow_key: str
+    stage: str
+    resource: Optional[Resource]
+    start_s: float
+    end_s: float
+
+    @property
+    def duration_s(self) -> float:
+        return self.end_s - self.start_s
+
+
+@dataclasses.dataclass
+class Timeline:
+    """One step's schedule: where every stage landed, and the makespan."""
+    flows: Tuple[Flow, ...]
+    scheduled: List[ScheduledStage]
+    makespan_s: float
+    serial_s: float                    # sum of every stage duration
+
+    @property
+    def overlap_efficiency(self) -> float:
+        """makespan / sum-of-stages; 1.0 = fully serial, 1/n = n flows
+        perfectly overlapped. 1.0 for an empty timeline."""
+        return self.makespan_s / self.serial_s if self.serial_s > 0 else 1.0
+
+    @property
+    def max_flow_serial_s(self) -> float:
+        """The old max-reduce price of this flow set."""
+        return max((f.serial_s for f in self.flows), default=0.0)
+
+    def busy_s(self) -> Dict[Resource, float]:
+        """Total occupied seconds per shared resource."""
+        busy: Dict[Resource, float] = defaultdict(float)
+        for s in self.scheduled:
+            if s.resource is not None:
+                busy[s.resource] += s.duration_s
+        return dict(busy)
+
+    def link_flow_counts(self) -> Dict[Resource, int]:
+        """Distinct flows that touched each (link, fabric) resource — the
+        OBSERVED per-link subscription the §8 k_flows premium models."""
+        seen: Dict[Resource, set] = defaultdict(set)
+        for s in self.scheduled:
+            if s.resource is not None and s.resource[0] == "link":
+                seen[s.resource].add(s.flow_key)
+        return {r: len(ks) for r, ks in seen.items()}
+
+    def utilization(self, resource: Resource) -> float:
+        """Busy fraction of one resource over the makespan."""
+        if self.makespan_s <= 0:
+            return 0.0
+        return self.busy_s().get(resource, 0.0) / self.makespan_s
+
+    def stage_totals(self) -> Dict[str, float]:
+        """Summed duration per stage name (the step's cost anatomy)."""
+        tot: Dict[str, float] = defaultdict(float)
+        for s in self.scheduled:
+            tot[s.stage] += s.duration_s
+        return dict(tot)
+
+    def flow_end_s(self, key: str) -> float:
+        return max((s.end_s for s in self.scheduled if s.flow_key == key),
+                   default=0.0)
+
+    def gantt(self, max_flows: int = 12) -> str:
+        """Per-flow stage spans in microseconds, earliest flow first."""
+        by_flow: Dict[str, List[ScheduledStage]] = defaultdict(list)
+        for s in self.scheduled:
+            by_flow[s.flow_key].append(s)
+        rows = sorted(by_flow.items(),
+                      key=lambda kv: min(s.start_s for s in kv[1]))
+        lines = []
+        for key, stages in rows[:max_flows]:
+            spans = " ".join(
+                f"{s.stage}[{s.start_s * 1e6:.0f}-{s.end_s * 1e6:.0f}us]"
+                for s in sorted(stages, key=lambda s: s.start_s))
+            lines.append(f"  {key:<32} {spans}")
+        if len(rows) > max_flows:
+            lines.append(f"  ... {len(rows) - max_flows} more flows")
+        return "\n".join(lines)
+
+
+def simulate(flows: Sequence[Flow]) -> Timeline:
+    """Greedy earliest-start list scheduling over capacity-1 resources.
+
+    Repeatedly schedules the ready stage (its flow's predecessors done)
+    with the earliest feasible start = max(flow ready, resource free);
+    ties break toward the earlier flow in input order, so the schedule is
+    deterministic. Work-conserving: the machine is never idle while a
+    stage could run, which gives makespan <= sum of all durations."""
+    flows = tuple(flows)
+    nxt = [0] * len(flows)                 # next stage index per flow
+    ready = [0.0] * len(flows)             # flow's predecessor finish time
+    free: Dict[Resource, float] = defaultdict(float)
+    scheduled: List[ScheduledStage] = []
+    remaining = sum(len(f.stages) for f in flows)
+    serial = sum(f.serial_s for f in flows)
+    makespan = 0.0
+    while remaining:
+        best_i, best_start = -1, None
+        for i, f in enumerate(flows):
+            if nxt[i] >= len(f.stages):
+                continue
+            st = f.stages[nxt[i]]
+            start = (ready[i] if st.resource is None
+                     else max(ready[i], free[st.resource]))
+            if best_start is None or start < best_start:
+                best_i, best_start = i, start
+        f = flows[best_i]
+        st = f.stages[nxt[best_i]]
+        end = best_start + st.duration_s
+        scheduled.append(ScheduledStage(f.key, st.name, st.resource,
+                                        best_start, end))
+        ready[best_i] = end
+        if st.resource is not None:
+            free[st.resource] = end
+        nxt[best_i] += 1
+        remaining -= 1
+        makespan = max(makespan, end)
+    return Timeline(flows, scheduled, makespan, serial)

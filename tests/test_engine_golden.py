@@ -1,0 +1,181 @@
+"""Golden regression tests for the serving engine (ISSUE 2): three small
+frozen traces — routed-only, fetch-heavy, mixed congested — with decision
+sequences AND per-step stage breakdowns asserted against checked-in JSON
+fixtures (tests/fixtures/). A cost-model or scheduler refactor that shifts
+the route/fetch crossover, the §8 occupancy-derived congestion premium, or
+the timeline's stage anatomy fails loudly here instead of silently moving
+the paper's numbers.
+
+Everything asserted is simulated (deterministic closed forms + the
+deterministic greedy timeline) — scheduler wall-clock never enters a
+fixture. Floats compare at rel 1e-9, loose enough for cross-platform
+libm/ulp drift, tight enough that any real model change trips it.
+
+Regenerate after an INTENTIONAL model change (then eyeball the diff):
+
+    PYTHONPATH=src python tests/test_engine_golden.py
+"""
+
+import json
+import pathlib
+
+import pytest
+
+from repro.serving.engine import EngineConfig, Request, ServingEngine
+
+FIXTURES = pathlib.Path(__file__).parent / "fixtures"
+REL_TOL = 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Frozen scenarios. Keep these REPRODUCIBLE-BY-CONSTRUCTION: fixed request
+# lists, no RNG, no wall-clock.
+# ---------------------------------------------------------------------------
+
+def _routed_only():
+    """Decode-shaped traffic (m_q moderate, reuse 1): every pair ROUTEs;
+    two pods exercise per-fabric dispatch splitting."""
+    eng = ServingEngine(8, pool_tokens=10**6, cfg=EngineConfig(),
+                        instances_per_pod=4)
+    for i in range(6):
+        eng.register_chunk(f"c{i}", holder=i % 4, length=2048)
+    steps = [
+        [Request(0, home=4, chunk_ids=["c0", "c1"], m_q=64),
+         Request(1, home=5, chunk_ids=["c2"], m_q=128),
+         Request(2, home=1, chunk_ids=["c0"], m_q=32)],
+        [Request(0, home=4, chunk_ids=["c0", "c1"], m_q=64),
+         Request(3, home=6, chunk_ids=["c3", "c4"], m_q=16)],
+        [Request(4, home=2, chunk_ids=["c5"], m_q=256)],
+    ]
+    return eng, steps
+
+
+def _fetch_heavy():
+    """Long reuse horizons (m_q=1): FETCH wins, persists, then the SAME
+    requests go resident — the last step is empty (no transport at all)."""
+    eng = ServingEngine(4, pool_tokens=10**6, cfg=EngineConfig())
+    for i in range(3):
+        eng.register_chunk(f"doc{i}", holder=1 + (i % 3), length=2048)
+    reqs = [Request(i, home=0, chunk_ids=[f"doc{i}"], m_q=1,
+                    expected_reuse_steps=100_000) for i in range(3)]
+    return eng, [reqs, reqs, reqs]
+
+
+def _mixed_congested():
+    """One holder serving 4 routed chunks (K=4 on its link: the §8 premium
+    derived from occupancy), a fetchy long-reuse reader, and a tiny chunk
+    whose re-prefill undercuts transport (LOCAL) — all three primitives and
+    the congestion path in one trace."""
+    eng = ServingEngine(8, pool_tokens=10**6, cfg=EngineConfig(),
+                        instances_per_pod=8)
+    for i in range(4):
+        eng.register_chunk(f"hot{i}", holder=1, length=2048)
+    eng.register_chunk("cold", holder=2, length=2048)
+    eng.register_chunk("tiny", holder=1, length=8)
+    steps = [
+        [Request(i, home=3 + i, chunk_ids=[f"hot{i}"], m_q=1024)
+         for i in range(4)]
+        + [Request(10, home=7, chunk_ids=["cold"], m_q=1,
+                   expected_reuse_steps=100_000),
+           Request(11, home=6, chunk_ids=["tiny"], m_q=4096)],
+        [Request(i, home=3 + i, chunk_ids=[f"hot{i}"], m_q=1024)
+         for i in range(2)]
+        + [Request(10, home=7, chunk_ids=["cold"], m_q=1,
+                   expected_reuse_steps=100_000)],
+    ]
+    return eng, steps
+
+
+SCENARIOS = {
+    "routed_only": _routed_only,
+    "fetch_heavy": _fetch_heavy,
+    "mixed_congested": _mixed_congested,
+}
+
+
+# ---------------------------------------------------------------------------
+# Snapshot + comparison.
+# ---------------------------------------------------------------------------
+
+def snapshot(build) -> dict:
+    eng, steps = build()
+    out = {"steps": []}
+    for reqs in steps:
+        recs = eng.schedule_step(reqs)
+        s = eng.stats[-1]
+        out["steps"].append({
+            "decisions": [
+                {"primitive": r.primitive, "chunk": r.chunk_id,
+                 "holder": r.holder, "n_requesters": r.n_requesters,
+                 "m_q_total": r.m_q_total, "backup": r.backup,
+                 "est_cost_s": r.est_cost_s,
+                 "stages": [[n, d] for n, d in r.stages]}
+                for r in recs],
+            "primitives": s.primitives,
+            "n_resident": s.n_resident,
+            "latency_s": s.latency_s,
+            "max_dispatch_s": s.max_dispatch_s,
+            "serial_stage_s": s.serial_stage_s,
+            "stage_totals": s.stage_totals,
+            "has_transport": s.has_transport,
+        })
+    return out
+
+
+def _assert_close(got, want, path):
+    if isinstance(want, float) and isinstance(got, (int, float)):
+        assert got == pytest.approx(want, rel=REL_TOL), \
+            f"{path}: {got} != {want}"
+    elif isinstance(want, dict):
+        assert isinstance(got, dict) and sorted(got) == sorted(want), \
+            f"{path}: keys {sorted(got)} != {sorted(want)}"
+        for k in want:
+            _assert_close(got[k], want[k], f"{path}.{k}")
+    elif isinstance(want, list):
+        assert isinstance(got, list) and len(got) == len(want), \
+            f"{path}: length {len(got)} != {len(want)}"
+        for i, (g, w) in enumerate(zip(got, want)):
+            _assert_close(g, w, f"{path}[{i}]")
+    else:
+        assert got == want, f"{path}: {got!r} != {want!r}"
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_golden_trace(name):
+    fixture = FIXTURES / f"engine_{name}.json"
+    assert fixture.exists(), \
+        f"missing fixture {fixture}; regenerate: python {__file__}"
+    want = json.loads(fixture.read_text())
+    got = snapshot(SCENARIOS[name])
+    _assert_close(got, want, name)
+
+
+def test_fixture_sanity():
+    """The frozen traces cover what they claim: primitives, congestion,
+    and an empty (fully-resident) step."""
+    routed = json.loads((FIXTURES / "engine_routed_only.json").read_text())
+    assert all(d["primitive"] == "route"
+               for s in routed["steps"] for d in s["decisions"])
+
+    fetchy = json.loads((FIXTURES / "engine_fetch_heavy.json").read_text())
+    assert any(d["primitive"] == "fetch"
+               for d in fetchy["steps"][0]["decisions"])
+    assert not fetchy["steps"][-1]["has_transport"]
+    assert fetchy["steps"][-1]["latency_s"] == 0.0
+
+    mixed = json.loads(
+        (FIXTURES / "engine_mixed_congested.json").read_text())
+    prims = {d["primitive"] for s in mixed["steps"] for d in s["decisions"]}
+    assert {"route", "fetch", "local"} <= prims
+    # 4 flows share holder 1's link in step 1: the makespan strictly
+    # exceeds the old independent max-reduce price
+    s0 = mixed["steps"][0]
+    assert s0["latency_s"] > s0["max_dispatch_s"]
+
+
+if __name__ == "__main__":
+    FIXTURES.mkdir(exist_ok=True)
+    for name, build in sorted(SCENARIOS.items()):
+        path = FIXTURES / f"engine_{name}.json"
+        path.write_text(json.dumps(snapshot(build), indent=1) + "\n")
+        print(f"wrote {path}")

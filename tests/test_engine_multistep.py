@@ -8,7 +8,8 @@ import pytest
 
 from repro.core import constants as C
 from repro.core import cost_model as cm
-from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.serving.engine import (EngineConfig, Request, ServingEngine,
+                                  transport_latencies)
 from repro.serving.workload import (WorkloadConfig, agentic_trace,
                                     register_corpus)
 
@@ -103,6 +104,79 @@ class TestCongestionPricing:
         overhead = float(np.mean(C.HOLDER_COMPUTE_DECODE_S)) + C.MERGE_COST_S
         want = cm.t_route_congested(ici, 1024, 1) + overhead
         for r in recs:
+            assert r.est_cost_s == pytest.approx(want, rel=1e-9)
+
+
+class TestEmptySteps:
+    def test_fully_resident_step_is_skipped_in_aggregation(self):
+        # the _critical_path edge case: an empty dispatch list prices to
+        # 0.0 and step_latency() still records the step — that zero must
+        # not enter p50/p99 (nobody waited 0s; the step moved no bytes)
+        eng = _engine(n=4)
+        eng.register_chunk("doc", holder=1, length=2048)
+        rq = Request(0, home=0, chunk_ids=["doc"], m_q=1,
+                     expected_reuse_steps=100_000)
+        eng.schedule_step([rq])          # FETCH, persists
+        eng.schedule_step([rq])          # resident: empty step
+        empty = eng.stats[-1]
+        assert empty.n_dispatches == 0 and not empty.has_transport
+        assert empty.latency_s == 0.0 and eng.step_latency(2) == 0.0
+        lats = transport_latencies(eng.stats)
+        assert len(lats) == 1            # only the fetch step aggregates
+        assert lats[0] == pytest.approx(eng.stats[0].latency_s)
+        assert (lats > 0).all()
+        # percentiles over transport steps only: unpolluted by the zero
+        assert np.percentile(lats, 50) > 0
+
+    def test_empty_step_overlap_efficiency_is_neutral(self):
+        eng = _engine(n=4)
+        eng.register_chunk("doc", holder=0, length=2048)
+        eng.schedule_step([Request(0, home=0, chunk_ids=["doc"])])
+        s = eng.stats[-1]                # resident at home: nothing priced
+        assert not s.has_transport and s.overlap_efficiency == 1.0
+        assert s.serial_stage_s == 0.0 and s.stage_totals == {}
+
+
+class TestOccupancyDerivedKFlows:
+    def test_local_voting_group_does_not_inflate_link_k(self):
+        # holder 1's link carries 2 ROUTE groups plus a group whose vote is
+        # LOCAL (tiny chunk, huge m_q): LOCAL never touches the wire, so
+        # the observed occupancy is K=2 — priced flat (§8), where the old
+        # assumed-count path would have charged the K=3 premium
+        eng = _engine(n=8, ipp=8)
+        eng.register_chunk("a", holder=1, length=2048)
+        eng.register_chunk("b", holder=1, length=2048)
+        eng.register_chunk("tiny", holder=1, length=8)
+        recs = eng.schedule_step([
+            Request(0, home=2, chunk_ids=["a"], m_q=1024),
+            Request(1, home=3, chunk_ids=["b"], m_q=1024),
+            Request(2, home=4, chunk_ids=["tiny"], m_q=4096)])
+        prims = {r.chunk_id: r for r in recs if not r.backup}
+        assert prims["tiny"].primitive == "local"
+        ici = C.fabric("tpu_ici")
+        overhead = float(np.mean(C.HOLDER_COMPUTE_DECODE_S)) + C.MERGE_COST_S
+        flat = cm.t_route_congested(ici, 1024, 2) + overhead
+        for cid in ("a", "b"):
+            assert prims[cid].primitive == "route"
+            assert prims[cid].est_cost_s == pytest.approx(flat, rel=1e-9)
+        # and flat == uncontended: K=2 is below the §8 subscription knee
+        assert flat == pytest.approx(
+            cm.t_route_congested(ici, 1024, 0) + overhead, rel=1e-9)
+
+    def test_observed_k_matches_timeline_link_count(self):
+        # the k the predicate was fed is exactly what the schedule shows
+        eng = _engine(n=8, ipp=8)
+        for i in range(3):
+            eng.register_chunk(f"c{i}", holder=1, length=2048)
+        eng.schedule_step([Request(i, home=2 + i, chunk_ids=[f"c{i}"],
+                                   m_q=1024) for i in range(3)])
+        from repro.serving import timeline as TL
+        counts = eng.timelines[-1].link_flow_counts()
+        assert counts[TL.link(1, 0)] == 3
+        ici = C.fabric("tpu_ici")
+        overhead = float(np.mean(C.HOLDER_COMPUTE_DECODE_S)) + C.MERGE_COST_S
+        want = cm.t_route_congested(ici, 1024, 3) + overhead
+        for r in eng.log:
             assert r.est_cost_s == pytest.approx(want, rel=1e-9)
 
 

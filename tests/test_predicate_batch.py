@@ -80,6 +80,68 @@ class TestBatchAgreesWithScalar:
                           payload=other)])
 
 
+class TestOccupancyFedCongestion:
+    """The engine now feeds decide_batch a k_flows DERIVED from observed
+    link occupancy (serving.engine._occupancy_k_flows) rather than assumed
+    group counts. Whatever produced the array, decide_batch under k_flows
+    must still be the scalar predicate with ROUTE re-priced by the §8
+    closed form — fuzz the occupancy-fed branch element-wise."""
+
+    @staticmethod
+    def _scalar_route_congested(r: P.Request, k: int) -> float:
+        # mirrors route_cost_batch's k_flows branch in scalar form
+        if not r.holder_can_compute:
+            return float("inf")
+        t_host = (C.HOST_OVERHEAD_BASE_S + C.HOST_OVERHEAD_PER_ROW_S * r.m_q
+                  if r.host_overhead else 0.0)
+        if r.k_selected is not None and r.n_holders > 1:
+            # fan-out sends are probe-bound and concurrent: the §8 single-
+            # link premium does not apply (matches the batch np.where)
+            return cm.t_route_fanout(r.fabric, r.m_q, r.n_holders,
+                                     r.payload) + t_host
+        return cm.t_route_congested_full(r.fabric, r.m_q, k,
+                                         r.payload) + t_host
+
+    def test_fuzzed_600_points_match_scalar_reference(self):
+        rng = np.random.RandomState(7)
+        reqs = _random_requests(rng, 600)
+        k_flows = rng.randint(0, 9, size=len(reqs)).astype(np.int64)
+        batch = P.RequestBatch.from_requests(reqs)
+        dec = P.decide_batch(batch, k_flows)
+        for i, r in enumerate(reqs):
+            tr = self._scalar_route_congested(r, int(k_flows[i]))
+            tf, tl = P.fetch_cost(r), P.local_cost(r)
+            want = min((tr, P.Primitive.ROUTE), (tf, P.Primitive.FETCH),
+                       (tl, P.Primitive.LOCAL), key=lambda x: x[0])[1]
+            assert dec.primitive(i) is want, (i, r, int(k_flows[i]))
+            if np.isfinite(tr):
+                np.testing.assert_allclose(dec.t_route[i], tr, rtol=1e-12)
+            np.testing.assert_allclose(dec.t_fetch[i], tf, rtol=1e-12)
+            np.testing.assert_allclose(dec.t_local[i], tl, rtol=1e-12)
+
+    def test_congestion_can_flip_route_to_fetch(self):
+        # the §8 point the engine's feedback loop relies on: enough observed
+        # flows on the link and the predicate itself re-routes to FETCH
+        ib = C.fabric("h100_ibgda")
+        r = P.Request(m_q=2048, c_t=1024, fabric=ib,
+                      expected_reuse_steps=10)
+        batch = P.RequestBatch.from_requests([r, r])
+        dec = P.decide_batch(batch, np.array([1, 24]))
+        assert dec.primitive(0) is P.Primitive.ROUTE
+        assert dec.primitive(1) is P.Primitive.FETCH
+
+    def test_zero_flows_matches_uncontended(self):
+        # k_flows=0 (a link nobody transports on) must price exactly like
+        # the uncontended path
+        rng = np.random.RandomState(11)
+        reqs = _random_requests(rng, 64)
+        batch = P.RequestBatch.from_requests(reqs)
+        got = P.decide_batch(batch, np.zeros(len(reqs), np.int64))
+        want = P.decide_batch(batch, None)
+        np.testing.assert_allclose(got.t_route, want.t_route, rtol=1e-12)
+        np.testing.assert_array_equal(got.code, want.code)
+
+
 class TestCongestedPricing:
     def test_kflows_flat_through_2_then_rises(self):
         ib = C.fabric("h100_ibgda")

@@ -1,0 +1,202 @@
+"""Directed timeline invariants (hypothesis-free; the randomized property
+sweep lives in test_timeline_props.py): a one-flow timeline IS the scalar
+cost model, wire stages serialize per (link, fabric), independent flows
+overlap, and the engine's step latency is the makespan — strictly above
+the old independent max-reduce price once a link is shared by >= 4 flows
+(the ISSUE-2 acceptance bar)."""
+
+import numpy as np
+import pytest
+
+from repro.core import constants as C
+from repro.core import cost_model as cm
+from repro.serving import timeline as TL
+from repro.serving.engine import (EngineConfig, Request, ServingEngine,
+                                  build_timeline)
+
+IB = C.fabric("h100_ibgda")
+ICI = C.fabric("tpu_ici")
+
+
+def _route_flow(i: int, fabric=IB, m_q: int = 1024, link_inst: int = 0,
+                holder: int = 0, requester: int = 99) -> TL.Flow:
+    return TL.transport_flow(
+        f"route#{i}", cm.route_stages(fabric, m_q),
+        link_res=TL.link(link_inst, 0), holder_sm=TL.sm(holder),
+        requester_sm=TL.sm(requester + i), primitive="route")
+
+
+class TestStageBreakdownsMatchClosedForms:
+    def test_route_stages_sum_to_congested_full(self):
+        for k in (0, 1, 2, 3, 5):
+            for mq in (1, 64, 1024):
+                want = cm.t_route_congested_full(IB, mq, k)
+                got = cm.stages_total_s(cm.route_stages(IB, mq, k))
+                np.testing.assert_allclose(got, want, rtol=1e-12)
+
+    def test_route_stages_with_host_overhead(self):
+        got = cm.stages_total_s(cm.route_stages(IB, 64, 0, t_host=3.5e-3))
+        np.testing.assert_allclose(
+            got, cm.t_route_congested_full(IB, 64, 0) + 3.5e-3, rtol=1e-12)
+
+    def test_fetch_stages_sum_to_amortised_fetch(self):
+        for reuse in (1, 7, 100_000):
+            want = cm.t_fetch(IB, 2048) / reuse
+            got = cm.stages_total_s(
+                cm.fetch_stages(IB, 2048, reuse_steps=reuse))
+            np.testing.assert_allclose(got, want, rtol=1e-12)
+
+    def test_fetch_stages_prefix_rehome_elides_splice(self):
+        stages = cm.fetch_stages(IB, 2048, contiguous=False)
+        assert [n for n, _ in stages] == ["pull"]
+        np.testing.assert_allclose(cm.stages_total_s(stages),
+                                   cm.t_fetch(IB, 2048, contiguous=False),
+                                   rtol=1e-12)
+
+    def test_local_and_scattered_stages(self):
+        np.testing.assert_allclose(
+            cm.stages_total_s(cm.local_stages(512)), cm.t_local(512),
+            rtol=1e-12)
+        np.testing.assert_allclose(
+            cm.stages_total_s(cm.fetch_scattered_stages(IB, 2048, 7)),
+            cm.t_fetch_scattered(IB, 2048, 7), rtol=1e-12)
+
+    def test_scale_stages(self):
+        stages = cm.route_stages(IB, 64)
+        scaled = cm.scale_stages(stages, 5.0)
+        np.testing.assert_allclose(cm.stages_total_s(scaled),
+                                   5.0 * cm.stages_total_s(stages),
+                                   rtol=1e-12)
+        assert cm.scale_stages(stages, 1.0) is stages
+
+
+class TestSingleFlowIsScalarPrice:
+    def test_one_route_flow_makespan_equals_price(self):
+        t = TL.simulate([_route_flow(0)])
+        want = cm.t_route_congested_full(IB, 1024, 0)
+        assert abs(t.makespan_s - want) <= 1e-9 * want
+        assert t.overlap_efficiency == pytest.approx(1.0)
+
+    def test_one_fetch_flow_makespan_equals_price(self):
+        f = TL.transport_flow("fetch#0",
+                              cm.fetch_stages(IB, 2048, reuse_steps=8),
+                              link_res=TL.link(0, 0), holder_sm=TL.sm(0),
+                              requester_sm=TL.sm(1))
+        t = TL.simulate([f])
+        want = cm.t_fetch(IB, 2048) / 8
+        assert abs(t.makespan_s - want) <= 1e-9 * want
+
+    def test_empty_timeline(self):
+        t = TL.simulate([])
+        assert t.makespan_s == 0.0 and t.overlap_efficiency == 1.0
+        assert t.link_flow_counts() == {} and t.stage_totals() == {}
+
+
+class TestSharedLinkSerializes:
+    def test_no_two_flows_overlap_on_a_link(self):
+        t = TL.simulate([_route_flow(i) for i in range(5)])
+        on_link = sorted((s for s in t.scheduled
+                          if s.resource == TL.link(0, 0)),
+                         key=lambda s: s.start_s)
+        assert len(on_link) == 3 * 5          # probe + transfer + return
+        for a, b in zip(on_link, on_link[1:]):
+            assert b.start_s >= a.end_s - 1e-15
+
+    def test_makespan_bracketed(self):
+        flows = [_route_flow(i) for i in range(6)]
+        t = TL.simulate(flows)
+        assert t.makespan_s >= max(f.serial_s for f in flows) - 1e-15
+        assert t.makespan_s <= sum(f.serial_s for f in flows) + 1e-12
+
+    def test_four_flows_exceed_old_max_reduce(self):
+        # acceptance bar: >= 4 concurrent flows on one link => the schedule
+        # makespan strictly exceeds the old (congested, independent) price
+        k = 4
+        t = TL.simulate([_route_flow(i) for i in range(k)])
+        assert t.makespan_s > cm.t_route_congested_full(IB, 1024, k)
+        assert t.link_flow_counts()[TL.link(0, 0)] == k
+
+    def test_independent_links_fully_overlap(self):
+        # distinct links, holders and requesters: no shared resource, so
+        # the makespan is the max single-flow price, not the sum
+        flows = [_route_flow(i, link_inst=i, holder=i) for i in range(4)]
+        t = TL.simulate(flows)
+        want = max(f.serial_s for f in flows)
+        assert abs(t.makespan_s - want) <= 1e-9 * want
+        assert t.overlap_efficiency == pytest.approx(0.25, rel=1e-6)
+
+    def test_holder_sm_occupancy_serializes_compute(self):
+        # distinct links but ONE holder: computes queue on the holder's SM
+        flows = [_route_flow(i, link_inst=i, holder=0) for i in range(3)]
+        t = TL.simulate(flows)
+        comp = sorted((s for s in t.scheduled if s.stage == "compute"),
+                      key=lambda s: s.start_s)
+        for a, b in zip(comp, comp[1:]):
+            assert b.start_s >= a.end_s - 1e-15
+
+
+class TestEngineTimelineLatency:
+    def test_single_dispatch_step_latency_is_the_scalar_price(self):
+        eng = ServingEngine(4, pool_tokens=10**6)
+        eng.register_chunk("doc", holder=1, length=2048)
+        recs = eng.schedule_step([Request(0, home=0, chunk_ids=["doc"],
+                                          m_q=256)])
+        assert [r.primitive for r in recs] == ["route"]
+        s = eng.stats[-1]
+        assert abs(s.latency_s - recs[0].est_cost_s) \
+            <= 1e-9 * recs[0].est_cost_s
+        assert s.latency_s == pytest.approx(s.max_dispatch_s, rel=1e-9)
+
+    def test_four_shared_link_flows_exceed_max_reduce(self):
+        eng = ServingEngine(8, pool_tokens=10**6, instances_per_pod=8)
+        for i in range(4):
+            eng.register_chunk(f"c{i}", holder=1, length=2048)
+        eng.schedule_step([Request(i, home=2 + i, chunk_ids=[f"c{i}"],
+                                   m_q=1024) for i in range(4)])
+        s = eng.stats[-1]
+        # old price: max over dispatches of the congested closed form
+        assert s.max_dispatch_s == pytest.approx(
+            cm.t_route_congested_full(ICI, 1024, 4), rel=1e-9)
+        assert s.latency_s > s.max_dispatch_s
+        assert 0.0 < s.overlap_efficiency < 1.0
+        assert s.serial_stage_s == pytest.approx(
+            sum(v for v in s.stage_totals.values()), rel=1e-9)
+
+    def test_backup_replaces_straggler_primary_in_timeline(self):
+        eng = ServingEngine(4, pool_tokens=10**6)
+        eng.register_chunk("doc", holder=1, length=2048)
+        eng.store.add_replica("doc", 3)
+        eng.set_straggler(1, 10.0)
+        recs = eng.schedule_step([Request(0, home=0, chunk_ids=["doc"],
+                                          m_q=256)])
+        backups = [r for r in recs if r.backup]
+        assert backups
+        s = eng.stats[-1]
+        # the timeline schedules the cheaper (backup) path
+        assert s.latency_s == pytest.approx(backups[0].est_cost_s, rel=1e-9)
+
+    def test_build_timeline_skips_stageless_records(self):
+        t = build_timeline([])
+        assert t.makespan_s == 0.0 and not t.flows
+
+    def test_backup_caps_only_its_own_fabric_group(self):
+        # one chunk on a straggler, requesters from BOTH pods: each fabric
+        # group fires its own backup. The cross-pod primary must be capped
+        # by the cross-pod backup — not by the other group's cheap
+        # intra-pod one — and each backup must schedule exactly once
+        eng = ServingEngine(8, pool_tokens=10**6, instances_per_pod=4)
+        eng.register_chunk("doc", holder=1, length=2048)
+        eng.store.add_replica("doc", 2)
+        eng.set_straggler(1, 10.0)
+        recs = eng.schedule_step([
+            Request(0, home=0, chunk_ids=["doc"], m_q=64),   # intra-pod
+            Request(1, home=5, chunk_ids=["doc"], m_q=64)])  # cross-pod
+        backups = sorted((r.est_cost_s for r in recs if r.backup))
+        assert len(backups) == 2
+        t = eng.timelines[-1]
+        assert len(t.flows) == 2               # one flow per fabric group
+        ends = sorted(t.flow_end_s(f.key) for f in t.flows)
+        # the cheap intra-pod backup cannot have absorbed the cross-pod
+        # group: the slowest flow costs at least the cross-pod backup
+        assert ends[-1] >= backups[-1] - 1e-12
+        assert eng.stats[-1].latency_s >= backups[-1] - 1e-12

@@ -1,0 +1,130 @@
+"""Property tests for the overlap-aware transport timeline (ISSUE 2):
+
+  * makespan >= the most expensive single flow (its independent price);
+  * makespan <= the serial sum of every stage (work conservation);
+  * no two flows ever overlap on the same (link, fabric) resource — nor
+    on any capacity-1 resource (SM occupancy included);
+  * stages within a flow run in order, back-pressure respected;
+  * a 1-flow timeline exactly equals the scalar cost-model price.
+
+Randomized over flow counts, stage durations, and resource topologies via
+hypothesis (dev-only; the module skips without it — requirements-dev.txt)."""
+
+import numpy as np
+import pytest
+
+from repro.core import constants as C
+from repro.core import cost_model as cm
+from repro.serving import timeline as TL
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+durations = st.floats(min_value=1e-7, max_value=1e-2,
+                      allow_nan=False, allow_infinity=False)
+
+
+@st.composite
+def flow_sets(draw):
+    n = draw(st.integers(min_value=1, max_value=8))
+    n_links = draw(st.integers(min_value=1, max_value=3))
+    n_insts = draw(st.integers(min_value=1, max_value=4))
+    flows = []
+    for i in range(n):
+        primitive = draw(st.sampled_from(["route", "fetch", "local"]))
+        if primitive == "route":
+            stages = (("probe", draw(durations)),
+                      ("transfer", draw(durations)),
+                      ("compute", draw(durations)),
+                      ("return", draw(durations)),
+                      ("merge", draw(durations)))
+        elif primitive == "fetch":
+            stages = (("pull", draw(durations)),
+                      ("splice", draw(durations)))
+        else:
+            stages = (("prefill", draw(durations)),)
+        link_inst = draw(st.integers(min_value=0, max_value=n_links - 1))
+        fabric_idx = draw(st.integers(min_value=0, max_value=1))
+        holder = draw(st.integers(min_value=0, max_value=n_insts - 1))
+        requester = draw(st.integers(min_value=0, max_value=n_insts - 1))
+        flows.append(TL.transport_flow(
+            f"{primitive}#{i}", stages,
+            link_res=(TL.link(link_inst, fabric_idx)
+                      if primitive != "local" else None),
+            holder_sm=TL.sm(holder), requester_sm=TL.sm(requester),
+            primitive=primitive))
+    return flows
+
+
+@given(flow_sets())
+@settings(max_examples=300, deadline=None)
+def test_makespan_bracketed_by_max_and_serial_sum(flows):
+    t = TL.simulate(flows)
+    hardest = max(f.serial_s for f in flows)
+    serial = sum(f.serial_s for f in flows)
+    assert t.makespan_s >= hardest - 1e-12 * max(1.0, hardest)
+    assert t.makespan_s <= serial + 1e-12 * max(1.0, serial)
+    assert t.serial_s == pytest.approx(serial, rel=1e-12)
+
+
+@given(flow_sets())
+@settings(max_examples=300, deadline=None)
+def test_no_two_flows_overlap_on_any_shared_resource(flows):
+    t = TL.simulate(flows)
+    by_res = {}
+    for s in t.scheduled:
+        if s.resource is not None:
+            by_res.setdefault(s.resource, []).append(s)
+    for res, stages in by_res.items():
+        stages.sort(key=lambda s: (s.start_s, s.end_s))
+        for a, b in zip(stages, stages[1:]):
+            assert b.start_s >= a.end_s - 1e-15, (res, a, b)
+
+
+@given(flow_sets())
+@settings(max_examples=200, deadline=None)
+def test_stages_within_a_flow_run_in_order(flows):
+    t = TL.simulate(flows)
+    by_flow = {}
+    for s in t.scheduled:
+        by_flow.setdefault(s.flow_key, []).append(s)
+    for f in flows:
+        got = by_flow[f.key]
+        # scheduled in declaration order, each starting after its
+        # predecessor finishes
+        assert [s.stage for s in got] == [s.name for s in f.stages]
+        for a, b in zip(got, got[1:]):
+            assert b.start_s >= a.end_s - 1e-15
+        assert t.flow_end_s(f.key) == pytest.approx(got[-1].end_s)
+
+
+@given(st.integers(min_value=1, max_value=8192),
+       st.integers(min_value=0, max_value=6),
+       st.sampled_from(sorted(C.FABRICS)))
+@settings(max_examples=200, deadline=None)
+def test_one_flow_timeline_is_the_scalar_price(m_q, k_flows, fabric_name):
+    fab = C.fabric(fabric_name)
+    f = TL.transport_flow("route#0", cm.route_stages(fab, m_q, k_flows),
+                          link_res=TL.link(0, 0), holder_sm=TL.sm(0),
+                          requester_sm=TL.sm(1))
+    t = TL.simulate([f])
+    want = cm.t_route_congested_full(fab, m_q, k_flows)
+    np.testing.assert_allclose(t.makespan_s, want, rtol=1e-9)
+    assert t.overlap_efficiency == pytest.approx(1.0, rel=1e-9)
+
+
+@given(st.integers(min_value=1, max_value=16384),
+       st.integers(min_value=1, max_value=100_000),
+       st.sampled_from(sorted(C.FABRICS)))
+@settings(max_examples=200, deadline=None)
+def test_one_fetch_flow_is_the_amortised_scalar_price(c_t, reuse,
+                                                      fabric_name):
+    fab = C.fabric(fabric_name)
+    f = TL.transport_flow("fetch#0",
+                          cm.fetch_stages(fab, c_t, reuse_steps=reuse),
+                          link_res=TL.link(0, 0), holder_sm=TL.sm(0),
+                          requester_sm=TL.sm(1))
+    t = TL.simulate([f])
+    np.testing.assert_allclose(t.makespan_s, cm.t_fetch(fab, c_t) / reuse,
+                               rtol=1e-9)
