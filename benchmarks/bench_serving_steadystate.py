@@ -37,7 +37,7 @@ from benchmarks.common import row
 from repro.serving.engine import (EngineConfig, ServingEngine,
                                   transport_latencies)
 from repro.serving.workload import (WorkloadConfig, agentic_trace,
-                                    register_corpus)
+                                    materialize_trace, register_corpus)
 
 N_STEPS = 128          # >= 100 (acceptance floor)
 AGENTS = 64            # >= 64 concurrent requests per step
@@ -93,8 +93,46 @@ def simulate(n_steps: int = N_STEPS, agents: int = AGENTS,
     }
 
 
+def backend_parity(n_steps: int = 12, agents: int = 8, seed: int = 0) -> dict:
+    """ISSUE 3: ONE materialized trace through the analytic AND the exec
+    backend (real c^KV arrays, CPU-scale geometry). Reports planner parity
+    (identical per-step decisions) and the worst |exec - single-instance
+    oracle| output error (§3.3, end-to-end through the scheduler)."""
+    from repro.serving.backends import AnalyticBackend, JaxExecBackend
+    from repro.serving.backends.jax_exec import max_oracle_err
+
+    def build(backend):
+        eng = ServingEngine(n_instances=4, pool_tokens=32 * 256,
+                            cfg=EngineConfig(), instances_per_pod=2,
+                            backend=backend)
+        cfg = WorkloadConfig(n_steps=n_steps, agents=agents,
+                             n_corpus_chunks=8, chunk_tokens=256,
+                             session_steps=(2, 8), seed=seed)
+        cids = register_corpus(eng, cfg)
+        return eng, materialize_trace(agentic_trace(cfg, eng, cids))
+
+    ana, steps = build(AnalyticBackend())
+    exe, _ = build(JaxExecBackend())
+    worst = 0.0
+    for reqs in steps:
+        ana.schedule_step(reqs)
+        exe.schedule_step(reqs)
+        worst = max(worst, max_oracle_err(exe, reqs, exe.step_idx))
+    keys = [(r.step, r.primitive, r.chunk_id, r.holder, r.m_q_total)
+            for r in ana.log]
+    parity = keys == [(r.step, r.primitive, r.chunk_id, r.holder,
+                       r.m_q_total) for r in exe.log]
+    return {"steps": n_steps, "agents": agents,
+            "decisions_identical": parity,
+            "dispatches": len(exe.log),
+            "max_output_err": worst}
+
+
 def run() -> list:
     out = simulate()
+    par = backend_parity()
+    assert par["decisions_identical"], "analytic/exec planner divergence"
+    assert par["max_output_err"] < 1e-4, par["max_output_err"]
     derived = "model:predicate+congestion measured:scheduler-wall"
     return [
         row("serving_steadystate/p50_step_latency",
@@ -106,6 +144,8 @@ def run() -> list:
             makespan_vs_max_reduce=round(out["makespan_vs_max_reduce"], 4)),
         row("serving_steadystate/decisions_per_sec", None, derived,
             decisions_per_sec=round(out["decisions_per_sec"])),
+        row("serving_backend_parity/exec_vs_analytic", None,
+            "measured:exec-backend(real arrays) vs analytic planner", **par),
     ]
 
 

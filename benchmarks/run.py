@@ -18,6 +18,7 @@ import traceback
 BENCHES = [
     "bench_payload_sweep",       # Table 1
     "bench_fabric_fit",          # Table 2
+    "calibrate_fabric",          # measured fabric tables (ROADMAP item)
     "bench_primitive_costs",     # Fig 1b
     "bench_crossover_map",       # Fig 3b
     "bench_scatter_gather",      # Fig 4a

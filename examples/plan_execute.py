@@ -1,0 +1,63 @@
+"""Plan / execute / account, end to end (ISSUE 3).
+
+ONE agentic trace drives the serving engine twice:
+
+  1. AnalyticBackend — the planner's dispatch plans scheduled on the
+     overlap-aware transport timeline (pure simulation, paper constants);
+  2. JaxExecBackend — the SAME plans executed on real c^KV arrays:
+     ROUTE ships the grouped query rows to the holder's copy, FETCH
+     replicates the chunk through the delta-0 splice then serves locally,
+     LOCAL re-prefills — and every request's merged output is checked
+     against single-instance attention over its concatenated chunks
+     (the paper's §3.3 exactness claim, now THROUGH the scheduler).
+
+    PYTHONPATH=src python examples/plan_execute.py
+"""
+
+from repro.serving import (AnalyticBackend, EngineConfig, JaxExecBackend,
+                           ServingEngine, WorkloadConfig, agentic_trace,
+                           materialize_trace, register_corpus)
+from repro.serving.backends.jax_exec import max_oracle_err
+
+
+def build(backend):
+    eng = ServingEngine(n_instances=8, pool_tokens=48 * 256,
+                        cfg=EngineConfig(), instances_per_pod=4,
+                        backend=backend)
+    wl = WorkloadConfig(n_steps=12, agents=12, n_corpus_chunks=10,
+                        chunk_tokens=256, session_steps=(3, 10), seed=1)
+    cids = register_corpus(eng, wl)
+    return eng, materialize_trace(agentic_trace(wl, eng, cids))
+
+
+def main():
+    ana, steps = build(AnalyticBackend())
+    exe, _ = build(JaxExecBackend())
+
+    print("=== one trace, two backends "
+          "(plan is shared; execute is pluggable) ===")
+    for reqs in steps:
+        ana.schedule_step(reqs)
+        exe.schedule_step(reqs)
+        sa, se = ana.stats[-1], exe.stats[-1]
+        # planner parity: identical decisions, identical analytic costs
+        assert sa.primitives == se.primitives
+        assert sa.latency_s == se.latency_s
+        # exec exactness: outputs == single-instance attention (§3.3)
+        worst = max_oracle_err(exe, reqs, exe.step_idx)
+        print(f"step {se.step:>2}: {se.n_dispatches} dispatches "
+              f"{se.primitives}, {se.n_resident}/{se.n_pairs} resident, "
+              f"makespan {se.latency_s*1e6:.0f}us | exec max|err| "
+              f"{worst:.2e}")
+
+    routes = sum(1 for r in exe.log if r.primitive == "route")
+    fetches = sum(1 for r in exe.log
+                  if r.primitive in ("fetch", "fetch_replica"))
+    print(f"\n{len(exe.log)} dispatches executed on real arrays: "
+          f"{routes} routed (query moved), {fetches} fetched (cache "
+          f"moved + spliced); decisions identical across backends — the "
+          f"predicate picked, both layers obeyed, outputs exact.")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,13 +5,21 @@ concurrent sub-agents.
 This is host-side control plane (replicated metadata); the cache bytes live
 device-side, sharded over the instance axis. The serving engine consults the
 store for residency, then the predicate for transport.
+
+Since ISSUE 3 chunks can BEAR their arrays: the exec-mode backend
+(repro.serving.backends.jax_exec) materializes each chunk's canonical c^KV
+entries as a real (length, d_qk) jax array in `Chunk.data`, and the spliced
+copies its FETCH path produces in `Chunk.replica_data`. The control plane
+stays array-free by default (the analytic backend never touches these), so
+the store is importable — and the planner runnable — without jax arrays in
+play; `data` is typed loosely for exactly that reason.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -25,6 +33,10 @@ class Chunk:
     replicas: List[int] = dataclasses.field(default_factory=list)
     immutable: bool = True
     last_access: int = 0        # engine step of last read (replica LRU)
+    # exec mode: canonical c^KV entries (length, d_qk) and the per-instance
+    # spliced copies backing the replicas; None / absent in analytic mode
+    data: Optional[Any] = None
+    replica_data: Dict[int, Any] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -76,13 +88,55 @@ class ChunkStore:
         return self.pool_tokens - self._alloc[instance]
 
     def register(self, chunk_id: str, holder: int, length: int,
-                 position_base: int = 0) -> Chunk:
+                 position_base: int = 0, data: Optional[Any] = None) -> Chunk:
         if chunk_id in self._chunks:
             raise KeyError(f"chunk {chunk_id} already registered")
         off = self.allocate(holder, length)
         c = Chunk(chunk_id, holder, off, length, position_base)
         self._chunks[chunk_id] = c
+        if data is not None:
+            try:
+                self.attach_data(chunk_id, data)   # same length validation
+            except ValueError:
+                del self._chunks[chunk_id]        # no half-registered chunk
+                self.free(holder, length)
+                raise
         return c
+
+    # -- array payloads (exec mode; ISSUE 3) --------------------------------
+
+    def attach_data(self, chunk_id: str, array: Any) -> Chunk:
+        """Bind the canonical c^KV array to a registered chunk. The leading
+        axis must match the registered token length — the control plane's
+        accounting and the device bytes must agree."""
+        c = self._chunks[chunk_id]
+        n = getattr(array, "shape", (c.length,))[0]
+        if n != c.length:
+            raise ValueError(
+                f"{chunk_id}: array has {n} tokens, registered {c.length}")
+        c.data = array
+        return c
+
+    def set_replica_data(self, chunk_id: str, instance: int,
+                         array: Any) -> None:
+        """Record the spliced copy backing a replica. Ignored for the
+        canonical holder (its `data` is authoritative) and for instances
+        the control plane does not list as replicas."""
+        c = self._chunks[chunk_id]
+        if instance in c.replicas:
+            c.replica_data[instance] = array
+
+    def array_on(self, chunk_id: str, instance: int) -> Optional[Any]:
+        """The array `instance` would attend locally: its spliced replica
+        copy if one was produced, else the canonical array when the chunk
+        is resident there. None when nothing is materialized (analytic
+        mode, or a replica whose bytes never moved through exec)."""
+        c = self._chunks[chunk_id]
+        if instance in c.replica_data:
+            return c.replica_data[instance]
+        if instance == c.holder:
+            return c.data
+        return None
 
     # -- discovery (cross-instance, by canonical id — §1: reuse that a local
     #    prefix tree cannot capture) --------------------------------------
@@ -127,6 +181,7 @@ class ChunkStore:
                 f"{chunk_id}: instance {instance} holds the canonical copy")
         if instance in c.replicas:
             c.replicas.remove(instance)
+            c.replica_data.pop(instance, None)
             self.free(instance, c.length)
 
     def drop_holder(self, instance: int) -> List[str]:
@@ -138,6 +193,10 @@ class ChunkStore:
             if c.holder == instance:
                 if c.replicas:
                     c.holder = c.replicas.pop(0)
+                    # the promoted replica's spliced copy becomes canonical
+                    # (the dead instance's array is unreachable)
+                    if c.holder in c.replica_data:
+                        c.data = c.replica_data.pop(c.holder)
                 else:
                     orphaned.append(c.chunk_id)
         for f in self._forks.values():

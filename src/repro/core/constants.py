@@ -9,7 +9,9 @@ benchmark suite validates the model against the paper's headline claims.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import json
+import pathlib
+from typing import Dict, Mapping, Optional, Union
 
 # ---------------------------------------------------------------------------
 # MLA wire payload (§3.2), DeepSeek-V2(-Lite) geometry.
@@ -53,6 +55,33 @@ class Fabric:
     link_peak_Bps: float
     t_launch_s: float = 9e-6
     notes: str = ""
+
+    # -- JSON fabric tables (ISSUE 3 satellite): engines and benchmarks can
+    # run on MEASURED constants (benchmarks/calibrate_fabric.py writes
+    # them) instead of the paper's Table 2 rows. -------------------------
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, obj: Mapping, name: Optional[str] = None) -> "Fabric":
+        """One fabric row from a JSON mapping; unknown keys are ignored so
+        tables may carry fit diagnostics (mape, sweep size) alongside."""
+        fields = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in obj.items() if k in fields}
+        if name is not None:
+            kw["name"] = name
+        if "name" not in kw:
+            raise ValueError("fabric row needs a name (key or argument)")
+        return cls(**kw)
+
+    @staticmethod
+    def load_table(path: Union[str, pathlib.Path]) -> "Dict[str, Fabric]":
+        """Read a {name: row} JSON fabric table (calibrate_fabric's output
+        format) into Fabric objects keyed by name."""
+        raw = json.loads(pathlib.Path(path).read_text())
+        return {name: Fabric.from_json(row, name=name)
+                for name, row in raw.items()}
 
 
 # Paper-measured fabrics (Table 2; link peaks from §8).
@@ -150,3 +179,14 @@ def fabric(name: str) -> Fabric:
         return FABRICS[name]
     except KeyError:
         raise KeyError(f"unknown fabric {name!r}; known: {sorted(FABRICS)}")
+
+
+def register_fabrics(table: "Dict[str, Fabric]",
+                     overwrite: bool = True) -> None:
+    """Install fabric rows (e.g. a measured Fabric.load_table) into the
+    process-wide FABRICS registry so fabric() — and therefore EngineConfig
+    fabric names — resolves them. With overwrite=False an existing paper
+    row wins and the measured row is skipped."""
+    for name, fab in table.items():
+        if overwrite or name not in FABRICS:
+            FABRICS[name] = fab

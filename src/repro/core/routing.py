@@ -54,6 +54,30 @@ def route_simulated(cfg: MLAConfig, q_abs: jax.Array,
     return merge_tree(parts)
 
 
+def route_batched(cfg: MLAConfig, queries: Sequence[jax.Array],
+                  holder_shards: Sequence[Sequence[jax.Array]],
+                  masks: Optional[Sequence[Sequence[jax.Array]]] = None
+                  ) -> "list[Partial]":
+    """Batched multi-holder routing, keyed by a dispatch plan: group g ships
+    queries[g] (the plan's stacked requester rows, (m_q_total, H, d_qk)) to
+    every holder in holder_shards[g] and returns the g-th merged Partial.
+
+    This is the serving engine's exec-mode entry (ISSUE 3): one planned
+    dispatch = one group = one holder-side batched partial per holder (the
+    §6.3 "batched partial is ~free" kernel shape), merged requester-side.
+    Semantically each group is route_simulated — so outputs are exact to
+    round-off under any partitioning — but the per-group batching mirrors
+    the per-(holder, chunk, fabric) dispatch batching the planner already
+    did, instead of re-deriving per-request calls.
+    """
+    if len(queries) != len(holder_shards):
+        raise ValueError(
+            f"{len(queries)} query groups vs {len(holder_shards)} shard sets")
+    return [route_simulated(cfg, q, shards,
+                            None if masks is None else masks[g])
+            for g, (q, shards) in enumerate(zip(queries, holder_shards))]
+
+
 # ---------------------------------------------------------------------------
 # shard_map collectives (production path; `axis` is the instance mesh axis).
 # These run inside shard_map — callers supply per-shard arrays.

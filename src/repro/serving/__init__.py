@@ -1,7 +1,20 @@
 from repro.serving.engine import (DispatchRecord, EngineConfig, Instance,
-                                  Request, ServingEngine, StepStats,
-                                  build_timeline, transport_latencies)
+                                  Request, ResidentPair, ServingEngine,
+                                  StepPlan, StepStats, build_timeline,
+                                  transport_latencies)
+from repro.serving.backends import (AnalyticBackend, ExecutionBackend,
+                                    StepExecution)
 from repro.serving.timeline import (Flow, ScheduledStage, Stage, Timeline,
                                     simulate, transport_flow)
 from repro.serving.workload import (WorkloadConfig, agentic_trace,
-                                    register_corpus)
+                                    load_trace, materialize_trace,
+                                    register_corpus, save_trace, trace_meta)
+
+
+def __getattr__(name: str):
+    # lazy: JaxExecBackend needs jax; everything above is numpy-only and
+    # must stay importable without it (see repro.serving.backends).
+    if name in ("JaxExecBackend", "TINY_MLA"):
+        from repro.serving import backends
+        return getattr(backends, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,35 @@
+"""Pluggable EXECUTE layer for the serving engine (plan / execute / account).
+
+The planner (repro.serving.engine) emits a StepPlan; a backend runs it:
+
+* AnalyticBackend — schedules the plan on the PR-2 overlap-aware transport
+  timeline. Pure simulation: StepStats are bit-identical to the pre-split
+  engine (the golden fixtures of tests/test_engine_golden.py pin this).
+* JaxExecBackend  — ALSO executes the planned attention on real c^KV
+  arrays (materialized in the chunk store): ROUTE via core.routing,
+  FETCH via the core.splice replication path followed by local attention,
+  LOCAL via absorbed_partial + merge. Returns actual decode outputs next
+  to the analytic stage costs, so the §3.3 exactness claim is testable
+  end-to-end THROUGH the scheduler, not just at the kernel layer.
+
+Later PRs swap in further backends (multi-host shard_map execution,
+overlapped real transfers) without touching the planner.
+"""
+
+from repro.serving.backends.base import ExecutionBackend, StepExecution
+from repro.serving.backends.analytic import AnalyticBackend
+
+__all__ = ["ExecutionBackend", "StepExecution", "AnalyticBackend",
+           "JaxExecBackend", "TINY_MLA"]
+
+_LAZY = ("JaxExecBackend", "TINY_MLA")
+
+
+def __getattr__(name: str):
+    # jax_exec pulls in jax; the planner + analytic backend are numpy-only
+    # and must stay importable without it (chunk_store's documented
+    # contract), so the exec backend loads on first use.
+    if name in _LAZY:
+        from repro.serving.backends import jax_exec
+        return getattr(jax_exec, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,27 @@
+"""AnalyticBackend: the PR-2 timeline as an ExecutionBackend.
+
+Executing a plan analytically = scheduling its DispatchRecords on the
+overlap-aware transport timeline (wire stages serialize per (link, fabric),
+holder compute per-instance). No arrays move; StepStats derived from this
+backend are bit-identical to the pre-split engine — the golden JSON
+fixtures of tests/test_engine_golden.py enforce that.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+from repro.serving.backends.base import StepExecution
+from repro.serving.plan import StepPlan, build_timeline
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from repro.serving.engine import ServingEngine
+
+
+class AnalyticBackend:
+    name = "analytic"
+
+    def execute(self, engine: "ServingEngine",
+                plan: StepPlan) -> StepExecution:
+        return StepExecution(timeline=build_timeline(plan.records),
+                             backend=self.name)

@@ -1,0 +1,44 @@
+"""The ExecutionBackend protocol: what the engine's EXECUTE layer plugs in.
+
+A backend receives the engine (for topology + chunk store) and the step's
+StepPlan, and returns a StepExecution. It must NOT re-plan: primitives,
+batching, persistence and replica placement are already decided — the
+backend's job is to realize (or simulate) the planned transports.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Protocol, TYPE_CHECKING, runtime_checkable
+
+from repro.serving import timeline as TL
+from repro.serving.plan import StepPlan
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from repro.serving.engine import ServingEngine
+
+
+@dataclasses.dataclass
+class StepExecution:
+    """What executing one StepPlan produced.
+
+    timeline — the overlap-aware schedule of the plan's records (both
+        backends produce it; the account layer derives StepStats from it).
+    outputs  — req_id -> merged attention Partial over every chunk the
+        request attended this step. Empty for the analytic backend; the
+        exec backend's outputs must reproduce single-instance attention to
+        float round-off (§3.3), which tests/test_backends.py asserts.
+    """
+    timeline: TL.Timeline
+    outputs: Dict[int, Any] = dataclasses.field(default_factory=dict)
+    backend: str = ""
+
+
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    name: str
+
+    def execute(self, engine: "ServingEngine",
+                plan: StepPlan) -> StepExecution:
+        """Run (or simulate) one planned step."""
+        ...                                          # pragma: no cover

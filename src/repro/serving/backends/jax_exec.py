@@ -1,0 +1,213 @@
+"""JaxExecBackend: run dispatch plans on real jax arrays.
+
+The planner decides ROUTE / FETCH / LOCAL per (holder, chunk, fabric)
+group; this backend EXECUTES those decisions:
+
+* chunks materialize as real c^KV arrays (S, d_qk) in the chunk store —
+  deterministic per chunk_id, so a re-run (or the exactness oracle) sees
+  the same cache bytes;
+* ROUTE — the grouped requesters' query tensors are stacked into one
+  holder-side batched partial (core.routing.route_batched: the §6.3
+  "batched partial is ~free" holder kernel), sliced back per request,
+  merged requester-side. The query moved, the cache did not.
+* FETCH — the chunk replicates through the core.splice path (delta-0
+  re-home: the rotation is the identity, §6.3 true-prefix case), the copy
+  is stored as the replica's array, and the requesters attend it LOCALLY —
+  the cache moved, exactly as priced.
+* LOCAL — re-prefill: the canonical entries are recomputed at the
+  requester (same deterministic materialization) and attended locally.
+* resident pairs (no transport planned) attend their local copy.
+
+Every request's per-chunk partials merge through the online-softmax merge
+(core.merge) — associative + commutative with identity — so the final
+output per request equals single-instance attention over the concatenated
+chunks to float round-off REGARDLESS of which primitive the predicate
+picked (§3.3, now end-to-end through the scheduler).
+
+The analytic stage costs ride along unchanged: the returned timeline is
+the same schedule the AnalyticBackend produces, so planner parity and
+StepStats parity hold by construction.
+"""
+
+from __future__ import annotations
+
+import zlib
+from collections import defaultdict
+from typing import Dict, List, Optional, TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.chunk_store import ChunkStore
+from repro.core.merge import Partial, merge_tree
+from repro.core.routing import route_batched
+from repro.core.splice import splice_delta_rotate
+from repro.models.mla import MLAConfig, absorbed_partial
+from repro.serving.backends.base import StepExecution
+from repro.serving.plan import Request, StepPlan, build_timeline
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from repro.serving.engine import ServingEngine
+
+
+# Execution geometry for CPU-scale tests and the serve CLI: d_qk = 24.
+# The PLANNER's costs always use the paper payload (cfg.payload on the
+# engine) — primitive decisions are invariant to the execution geometry,
+# which is what makes analytic-vs-exec planner parity exact.
+TINY_MLA = MLAConfig(d_model=64, n_heads=2, kv_lora_rank=16,
+                     qk_nope_head_dim=8, qk_rope_head_dim=8, v_head_dim=8)
+
+
+def _stable_seed(*parts) -> int:
+    """Deterministic 32-bit seed from stringable parts (NOT Python hash(),
+    which is salted per process)."""
+    return zlib.crc32(":".join(str(p) for p in parts).encode())
+
+
+def chunk_array(cfg: MLAConfig, chunk_id: str, length: int,
+                dtype=jnp.float32) -> jax.Array:
+    """The canonical c^KV array of a chunk: (length, d_qk), deterministic
+    in chunk_id — re-prefill (LOCAL) regenerates exactly these entries."""
+    key = jax.random.PRNGKey(_stable_seed("ckv", chunk_id))
+    return jax.random.normal(key, (length, cfg.d_qk), dtype)
+
+
+def query_for(cfg: MLAConfig, rq: Request, step: int,
+              dtype=jnp.float32) -> jax.Array:
+    """The request's absorbed decode queries this step: (m_q, H, d_qk),
+    deterministic in (query_seed, step). The oracle in tests regenerates
+    the identical tensor."""
+    seed = rq.req_id if rq.query_seed is None else rq.query_seed
+    key = jax.random.fold_in(jax.random.PRNGKey(_stable_seed("q", seed)),
+                             step)
+    return jax.random.normal(key, (rq.m_q, cfg.n_heads, cfg.d_qk), dtype)
+
+
+def oracle_partial(cfg: MLAConfig, store: ChunkStore, rq: Request,
+                   step: int, dtype=jnp.float32) -> Partial:
+    """The §3.3 exactness reference: single-instance attention over the
+    request's CONCATENATED chunks (canonical arrays, same query tensor the
+    backend materialized). Every exec-backend consumer (tests, benchmarks,
+    the serve CLI's --verify, examples) checks against THIS — one oracle,
+    so query/chunk materialization can never silently diverge from it."""
+    q = query_for(cfg, rq, step, dtype)
+    cat = jnp.concatenate([store.lookup(c).data for c in rq.chunk_ids],
+                          axis=0)
+    return absorbed_partial(cfg, q, cat)
+
+
+def max_oracle_err(engine: "ServingEngine", reqs: List[Request],
+                   step: int) -> float:
+    """Worst |exec output - oracle| over a step's requests. The engine
+    must be running a JaxExecBackend (its cfg/dtype define the oracle)."""
+    backend = engine.backend
+    outs = engine.outputs_of(step)
+    worst = 0.0
+    for rq in reqs:
+        want = oracle_partial(backend.cfg, engine.store, rq, step,
+                              backend.dtype)
+        worst = max(worst, float(jnp.max(
+            jnp.abs(outs[rq.req_id].o - want.o))))
+    return worst
+
+
+class JaxExecBackend:
+    """Execute StepPlans on real arrays. cfg sets the EXECUTION geometry
+    (array shapes); it is independent of the planner's cost payload."""
+
+    name = "exec"
+
+    def __init__(self, cfg: MLAConfig = TINY_MLA, dtype=jnp.float32):
+        self.cfg = cfg
+        self.dtype = dtype
+
+    # -- materialization ----------------------------------------------------
+
+    def ensure_chunk_data(self, store: ChunkStore,
+                          chunk_id: str) -> jax.Array:
+        """Canonical array of chunk_id, materializing it on first touch."""
+        chunk = store.lookup(chunk_id)
+        if chunk.data is None:
+            store.attach_data(
+                chunk_id, chunk_array(self.cfg, chunk_id, chunk.length,
+                                      self.dtype))
+        return chunk.data
+
+    def _array_on(self, store: ChunkStore, chunk_id: str,
+                  instance: int) -> jax.Array:
+        """The copy instance would attend: its replica array if the exec
+        path produced one, else the canonical array (replicas created
+        outside the exec path — e.g. hand-seeded in examples — fall back
+        to canonical bytes, which is what a real pull would deliver)."""
+        arr = store.array_on(chunk_id, instance)
+        return arr if arr is not None else self.ensure_chunk_data(store,
+                                                                  chunk_id)
+
+    # -- execution ----------------------------------------------------------
+
+    def execute(self, engine: "ServingEngine",
+                plan: StepPlan) -> StepExecution:
+        store = engine.store
+        reqs: Dict[int, Request] = {rq.req_id: rq for rq in plan.requests}
+        queries: Dict[int, jax.Array] = {}
+
+        def q_of(rid: int) -> jax.Array:
+            if rid not in queries:
+                queries[rid] = query_for(self.cfg, reqs[rid], plan.step,
+                                         self.dtype)
+            return queries[rid]
+
+        parts: Dict[int, List[Partial]] = defaultdict(list)
+
+        # resident accesses: local attention on the instance's copy
+        for rp in plan.resident_pairs:
+            arr = self._array_on(store, rp.chunk_id, rp.instance)
+            parts[rp.req_id].append(
+                absorbed_partial(self.cfg, q_of(rp.req_id), arr))
+
+        for rec in plan.records:
+            if rec.backup or not rec.req_ids:
+                continue
+            if rec.primitive == "route":
+                self._exec_route(store, rec, q_of, parts)
+            elif rec.primitive in ("fetch", "fetch_replica"):
+                self._exec_fetch(store, rec, q_of, parts)
+            else:                                     # local re-prefill
+                arr = self.ensure_chunk_data(store, rec.chunk_id)
+                for rid in rec.req_ids:
+                    parts[rid].append(
+                        absorbed_partial(self.cfg, q_of(rid), arr))
+
+        outputs = {rid: merge_tree(ps) for rid, ps in parts.items()}
+        return StepExecution(timeline=build_timeline(plan.records),
+                             outputs=outputs, backend=self.name)
+
+    def _exec_route(self, store: ChunkStore, rec, q_of, parts) -> None:
+        """One batched dispatch: stack the group's queries, one holder-side
+        partial over the holder's resident copy, slice back per request."""
+        holder_arr = self._array_on(store, rec.chunk_id, rec.holder)
+        qs = [q_of(rid) for rid in rec.req_ids]
+        stacked = jnp.concatenate(qs, axis=0) if len(qs) > 1 else qs[0]
+        merged = route_batched(self.cfg, [stacked], [[holder_arr]])[0]
+        off = 0
+        for rid, q in zip(rec.req_ids, qs):
+            n = q.shape[0]
+            parts[rid].append(Partial(o=merged.o[off:off + n],
+                                      m=merged.m[off:off + n],
+                                      l=merged.l[off:off + n]))
+            off += n
+
+    def _exec_fetch(self, store: ChunkStore, rec, q_of, parts) -> None:
+        """Move the cache: pull the source copy, delta-0 splice (identity
+        rotation — the §6.3 true-prefix re-home our store models), persist
+        the replica array where the planner made it resident, then serve
+        the group with LOCAL attention on the moved copy."""
+        src = (rec.link_instance if rec.primitive == "fetch_replica"
+               else rec.holder)
+        src_arr = self._array_on(store, rec.chunk_id, src)
+        moved = splice_delta_rotate(src_arr, 0, self.cfg)
+        dest = rec.home
+        if dest >= 0 and store.resident_on(rec.chunk_id, dest):
+            store.set_replica_data(rec.chunk_id, dest, moved)
+        for rid in rec.req_ids:
+            parts[rid].append(absorbed_partial(self.cfg, q_of(rid), moved))

@@ -1,39 +1,31 @@
 """Predicate-driven serving engine: the layer that CONSUMES the paper's
 cost model (§5: "the serving system that consumes the rule").
 
-The scheduler is vectorized and multi-step. Per decode step it:
+Since ISSUE 3 a decode step runs through three layers:
 
-  * resolves residency (chunk_store) for every (request, chunk) pair;
-  * prices ALL pairs in one decide_batch() call (core.predicate) — the
-    closed-form §5 predicate evaluated as numpy arrays, with the fabric
-    picked per pair from the instance topology (intra-pod ICI vs cross-pod
-    DCN — probe latency, not peak bandwidth, §5.5);
-  * prices ROUTE under link subscription: concurrent batched dispatches
-    sharing a (holder, fabric) link pay t_route_congested (§8) — at K>=3
-    flows the predicate itself can flip decode traffic to FETCH. The
-    k_flows fed to the predicate is DERIVED from observed link occupancy
-    (an uncontended pass decides provisional primitives; only groups that
-    actually elect a transport occupy their link), not assumed from raw
-    group counts;
-  * schedules every step on an overlap-aware transport timeline
-    (repro.serving.timeline): wire stages serialize per (link, fabric),
-    holder compute is charged per-instance occupancy, independent stages
-    overlap — StepStats.latency_s is the MAKESPAN of that schedule, not a
-    max of independent prices (so congestion and fabric sharing are
-    visible in the simulated latency);
-  * batches cross-request dispatches per (holder, chunk, fabric) — one
-    dispatch per holder per fabric (the §5.3 reduction, without the seed
-    bug of pricing a cross-pod requester at the first entry's fabric);
-  * caps per-holder fan-in at the N~8 compute elbow (§6.3): beyond it,
-    schedules a replica (amortised FETCH) and rebalances;
-  * PERSISTS fetches: a chunk the predicate says to FETCH becomes resident
-    at the requester (chunk_store replica), so subsequent steps serve it
-    locally for free — the amortisation the predicate priced actually
-    accrues across steps;
-  * retires cold replicas LRU under pool pressure (canonical copies never
-    retire) so sustained traffic cannot exhaust an instance pool;
-  * fires straggler backups past the p99 deadline and re-homes orphaned
-    chunks via LOCAL on holder failure.
+  PLAN    (plan_step, this module) — residency resolution (chunk_store),
+          ONE vectorized decide_batch() over every non-resident
+          (request, chunk) pair (core.predicate: the closed-form §5
+          predicate as numpy arrays, fabric picked per pair from the
+          instance topology — probe latency, not peak bandwidth, §5.5),
+          §8 link-subscription pricing with k_flows DERIVED from observed
+          occupancy, per-(holder, chunk, fabric) dispatch batching (§5.3),
+          fan-in capping at the N~8 elbow with replica spawns (§6.3),
+          fetch persistence (the amortisation the predicate priced
+          actually accrues) and LRU replica retirement under pool
+          pressure. Output: a StepPlan (repro.serving.plan).
+  EXECUTE (a pluggable ExecutionBackend, repro.serving.backends) — the
+          AnalyticBackend schedules the plan on the overlap-aware
+          transport timeline (repro.serving.timeline: wire stages
+          serialize per (link, fabric), holder compute charged
+          per-instance, StepStats.latency_s is the MAKESPAN); the
+          JaxExecBackend additionally RUNS the planned attention on real
+          c^KV arrays and returns actual decode outputs (§3.3 exactness,
+          end-to-end through the scheduler).
+  ACCOUNT (_account) — StepStats from the plan + the executed timeline.
+
+Straggler backups past the p99 deadline and LOCAL re-homing of orphaned
+chunks on holder failure are planned like any other dispatch.
 
 run() drives the loop over a trace (see repro.serving.workload) and emits
 per-step StepStats — the substrate benchmarks/bench_serving_steadystate.py
@@ -55,6 +47,18 @@ from repro.core import predicate as P
 from repro.core.chunk_store import ChunkStore
 from repro.core.constants import Fabric
 from repro.serving import timeline as TL
+from repro.serving.backends.base import ExecutionBackend, StepExecution
+# Plan-layer types live in repro.serving.plan; re-exported here so the
+# historical `from repro.serving.engine import ...` imports keep working.
+from repro.serving.plan import (DispatchRecord, Request, ResidentPair,
+                                StepPlan, StepStats, _critical_path,
+                                build_timeline, transport_latencies)
+
+__all__ = [
+    "DispatchRecord", "EngineConfig", "Instance", "Request", "ResidentPair",
+    "ServingEngine", "StepPlan", "StepStats", "build_timeline",
+    "transport_latencies",
+]
 
 
 @dataclasses.dataclass
@@ -67,16 +71,6 @@ class Instance:
 
 
 @dataclasses.dataclass
-class Request:
-    req_id: int
-    home: int                      # requester instance
-    chunk_ids: List[str]
-    m_q: int = 1                   # query rows per chunk this step
-    expected_reuse_steps: int = 1
-    k_selected: Optional[int] = None
-
-
-@dataclasses.dataclass
 class EngineConfig:
     fanin_cap: int = C.HOLDER_COMPUTE_ELBOW_N      # §6.3 elbow
     staging_streams: int = C.STAGING_STREAMS_ELBOW_K  # §6.2 policy constant
@@ -86,132 +80,10 @@ class EngineConfig:
     payload: cm.Payload = cm.MLA_PAYLOAD
     congestion_aware: bool = True                  # §8 link-subscription pricing
     persist_fetches: bool = True                   # fetched chunks stay resident
-
-
-@dataclasses.dataclass
-class DispatchRecord:
-    step: int
-    holder: int
-    primitive: str
-    chunk_id: str
-    n_requesters: int
-    m_q_total: int
-    est_cost_s: float
-    backup: bool = False
-    # timeline inputs: which wire the dispatch occupies (link_instance < 0
-    # means no wire — LOCAL), the requester-side instance for merge/splice,
-    # and the §4 per-stage breakdown the est_cost_s sums over
-    fabric_idx: int = -1
-    link_instance: int = -1
-    home: int = -1
-    stages: cm.StageList = ()
-
-
-@dataclasses.dataclass
-class StepStats:
-    """Per-step scheduler telemetry (the benchmark's raw material)."""
-    step: int
-    n_requests: int
-    n_pairs: int                   # (request, chunk) accesses resolved
-    n_priced: int                  # pairs that reached decide_batch
-    n_resident: int                # served by local attention, no transport
-    n_dispatches: int              # primary dispatches issued
-    primitives: Dict[str, int]
-    latency_s: float               # makespan of the step's transport timeline
-    sched_wall_s: float            # scheduler wall-clock for this step
-    replicas_spawned: int = 0
-    evictions: int = 0
-    # timeline telemetry: the old independent max-reduce price (what PR 1
-    # reported as latency), the serial sum of every stage, and the summed
-    # duration per stage name
-    max_dispatch_s: float = 0.0
-    serial_stage_s: float = 0.0
-    stage_totals: Dict[str, float] = dataclasses.field(default_factory=dict)
-
-    @property
-    def decisions_per_sec(self) -> float:
-        """Predicate evaluations per wall-clock second (resident pairs skip
-        the predicate and are excluded)."""
-        return self.n_priced / self.sched_wall_s if self.sched_wall_s else 0.0
-
-    @property
-    def has_transport(self) -> bool:
-        """False for a fully-resident step: nothing was scheduled, so the
-        0.0 makespan is not a latency any request experienced."""
-        return self.n_dispatches > 0
-
-    @property
-    def overlap_efficiency(self) -> float:
-        """makespan / sum-of-stages (1.0 = fully serial, 1/n = n flows
-        perfectly overlapped; 1.0 for an empty step)."""
-        return (self.latency_s / self.serial_stage_s
-                if self.serial_stage_s > 0 else 1.0)
-
-
-def transport_latencies(stats: Iterable[StepStats]) -> np.ndarray:
-    """Latencies of the steps that actually dispatched work. Fully-resident
-    steps have an empty schedule (latency 0.0); including them would deflate
-    p50/p99 with zeros nobody waited for — aggregation must skip them."""
-    return np.array([s.latency_s for s in stats if s.has_transport],
-                    np.float64)
-
-
-def _backup_of(records: List["DispatchRecord"],
-               i: int) -> Optional["DispatchRecord"]:
-    """The straggler backup shadowing records[i], if any. schedule_step
-    emits a backup IMMEDIATELY after its primary, so adjacency — not
-    chunk_id alone — is the association: two fabric groups of one chunk
-    each carry their own backup and must not cap each other."""
-    nxt = i + 1
-    if nxt < len(records) and records[nxt].backup \
-            and records[nxt].chunk_id == records[i].chunk_id:
-        return records[nxt]
-    return None
-
-
-def _critical_path(records: List["DispatchRecord"]) -> float:
-    """Independent max-reduce price of one step's records: max over primary
-    dispatches, where a backup caps its own primary's contribution. Through
-    PR 1 this WAS the step latency; it is kept as StepStats.max_dispatch_s —
-    the no-contention floor the timeline makespan is compared against."""
-    worst = 0.0
-    for i, r in enumerate(records):
-        if r.backup:
-            continue
-        cost = r.est_cost_s
-        b = _backup_of(records, i)
-        if b is not None:
-            cost = min(cost, b.est_cost_s)
-        worst = max(worst, cost)
-    return worst
-
-
-def build_timeline(records: List["DispatchRecord"]) -> TL.Timeline:
-    """One step's dispatch records as an overlap-aware schedule.
-
-    A straggler backup replaces its own primary (adjacent record) when it
-    is the cheaper path (the engine cancels the primary at the p99
-    deadline — modeled as the faster of the two serving the chunk),
-    mirroring _critical_path's min. Wire stages bind to the dispatch's
-    (link_instance, fabric) resource, compute to the holder's SM,
-    merge/splice/prefill to the requester's."""
-    flows: List[TL.Flow] = []
-    for i, r in enumerate(records):
-        if r.backup:
-            continue
-        b = _backup_of(records, i)
-        eff = b if b is not None and b.est_cost_s < r.est_cost_s else r
-        if not eff.stages:
-            continue
-        link_res = (TL.link(eff.link_instance, eff.fabric_idx)
-                    if eff.link_instance >= 0 else None)
-        requester = eff.home if eff.home >= 0 else eff.holder
-        flows.append(TL.transport_flow(
-            f"{eff.primitive}:{eff.chunk_id}@{eff.holder}#{i}",
-            eff.stages, link_res=link_res,
-            holder_sm=TL.sm(eff.holder), requester_sm=TL.sm(requester),
-            primitive=eff.primitive, chunk_id=eff.chunk_id))
-    return TL.simulate(flows)
+    # exec mode: steps of decode-output history to retain (outputs hold
+    # real arrays; keeping every step would grow memory linearly over a
+    # run). < 0 keeps everything.
+    retain_outputs: int = 8
 
 
 # one resolved (request, chunk) access, pre-decision
@@ -228,15 +100,24 @@ class _Pair:
 class ServingEngine:
     def __init__(self, n_instances: int, pool_tokens: int,
                  cfg: EngineConfig = EngineConfig(),
-                 instances_per_pod: int = 0):
+                 instances_per_pod: int = 0,
+                 backend: Optional[ExecutionBackend] = None):
         self.cfg = cfg
         self.store = ChunkStore(n_instances, pool_tokens)
         ipp = instances_per_pod or n_instances
         self.instances = [Instance(i, pod=i // ipp)
                           for i in range(n_instances)]
+        if backend is None:
+            from repro.serving.backends.analytic import AnalyticBackend
+            backend = AnalyticBackend()
+        self.backend: ExecutionBackend = backend
         self.log: List[DispatchRecord] = []
         self.stats: List[StepStats] = []
+        self.plans: List[StepPlan] = []          # parallel to self.stats
         self.timelines: List[TL.Timeline] = []   # parallel to self.stats
+        # exec-mode decode outputs per step: req_id -> merged Partial
+        # (empty dicts under the analytic backend)
+        self.step_outputs: List[Dict[int, object]] = []
         self.step_idx = 0
         # fabric table shared by every decide_batch call: idx 0 = intra-pod,
         # idx 1 = cross-pod
@@ -259,8 +140,9 @@ class ServingEngine:
     # -- admission ------------------------------------------------------------
 
     def register_chunk(self, chunk_id: str, holder: int, length: int,
-                       position_base: int = 0):
-        return self.store.register(chunk_id, holder, length, position_base)
+                       position_base: int = 0, data=None):
+        return self.store.register(chunk_id, holder, length, position_base,
+                                   data=data)
 
     # -- pool pressure ---------------------------------------------------------
 
@@ -288,17 +170,19 @@ class ServingEngine:
         self.store.add_replica(chunk_id, instance)
         return True
 
-    # -- scheduling one decode step --------------------------------------------
+    # -- PLAN: one decode step -------------------------------------------------
 
-    def schedule_step(self, requests: List[Request]) -> List[DispatchRecord]:
+    def plan_step(self, requests: List[Request]) -> StepPlan:
         """Plan all transports for one global decode step: batched
         predicate, per-(holder, chunk, fabric) dispatch batching, link
-        congestion pricing, fan-in capping, replica persistence."""
-        t_wall0 = time.perf_counter()
+        congestion pricing, fan-in capping, replica persistence. Planning
+        COMMITS residency state (persisted fetches, replica spawns, LRU
+        evictions); execution replays the plan without re-deciding."""
         self.step_idx += 1
         self._evictions_this_step = 0
         replicas_spawned = 0
         records: List[DispatchRecord] = []
+        resident_pairs: List[ResidentPair] = []
         pairs: List[_Pair] = []
         n_resident = 0
         n_pairs = 0
@@ -322,7 +206,8 @@ class ServingEngine:
                         home=rq.home,
                         stages=cm.scale_stages(
                             cm.local_stages(chunk.length,
-                                            self.cfg.payload.n_layers), sd)))
+                                            self.cfg.payload.n_layers), sd),
+                        req_ids=(rq.req_id,)))
                     if self.store.capacity_left(rq.home) >= chunk.length:
                         self.store.allocate(rq.home, chunk.length)
                         chunk.holder = rq.home
@@ -331,8 +216,10 @@ class ServingEngine:
                 holder = min(holders, key=lambda h: 0.0 if h == rq.home
                              else self.fabric_between(rq.home, h).t_probe_s)
                 if holder == rq.home:
-                    n_resident += 1
-                    continue          # resident: free local attention
+                    n_resident += 1    # resident: free local attention
+                    resident_pairs.append(
+                        ResidentPair(rq.req_id, cid, rq.home))
+                    continue
                 fi = self.fabric_idx_between(rq.home, holder)
                 pairs.append(_Pair(rq, cid, holder, fi,
                                    chunk.length, len(holders)))
@@ -437,7 +324,8 @@ class ServingEngine:
                         home=home,
                         stages=cm.scale_stages(
                             cm.local_stages(chunk.length,
-                                            self.cfg.payload.n_layers), sd)))
+                                            self.cfg.payload.n_layers), sd),
+                        req_ids=tuple(p.rq.req_id for p in ps)))
                 continue
             # timeline stage durations are UNCONTENDED (k=0): on the
             # timeline, §8 queueing is simulated — flows serialize on the
@@ -475,7 +363,8 @@ class ServingEngine:
             records.append(DispatchRecord(
                 self.step_idx, holder, primitive, cid, n_req, m_q_total,
                 cost, fabric_idx=fi, link_instance=holder, home=dest,
-                stages=cm.scale_stages(stages, sd)))
+                stages=cm.scale_stages(stages, sd),
+                req_ids=tuple(p.rq.req_id for p in entries)))
             # straggler mitigation: fire a backup to a replica if the
             # holder's (simulated) latency blows the p99 deadline
             if (self.instances[holder].slowdown
@@ -503,28 +392,58 @@ class ServingEngine:
                         self.step_idx, tgt, primitive, cid, n_req,
                         m_q_total, backup_cost, backup=True,
                         fabric_idx=fi2, link_instance=tgt, home=dest,
-                        stages=cm.scale_stages(backup_stages, sd2)))
+                        stages=cm.scale_stages(backup_stages, sd2),
+                        req_ids=tuple(p.rq.req_id for p in entries)))
 
-        self.log.extend(records)
+        return StepPlan(
+            step=self.step_idx, requests=list(requests), records=records,
+            resident_pairs=resident_pairs, n_pairs=n_pairs,
+            n_priced=len(pairs), n_resident=n_resident,
+            replicas_spawned=replicas_spawned,
+            evictions=self._evictions_this_step)
+
+    # -- PLAN -> EXECUTE -> ACCOUNT --------------------------------------------
+
+    def schedule_step(self, requests: List[Request]) -> List[DispatchRecord]:
+        """One decode step end-to-end: plan the transports, execute them on
+        the configured backend, account the StepStats. Returns the planned
+        records (the engine's historical contract)."""
+        t_wall0 = time.perf_counter()
+        plan = self.plan_step(requests)
+        execution = self.backend.execute(self, plan)
+        self._account(plan, execution, time.perf_counter() - t_wall0)
+        return plan.records
+
+    def _account(self, plan: StepPlan, execution: StepExecution,
+                 wall_s: float) -> None:
+        """Fold one planned + executed step into the engine's telemetry."""
+        self.log.extend(plan.records)
+        self.plans.append(plan)
+        self.step_outputs.append(execution.outputs)
+        if self.cfg.retain_outputs >= 0:
+            # exactly one step falls out of the window per step
+            idx = len(self.step_outputs) - self.cfg.retain_outputs - 1
+            if idx >= 0:
+                self.step_outputs[idx] = {}
         prim_counts: Dict[str, int] = defaultdict(int)
-        for r in records:
+        for r in plan.records:
             if not r.backup:
                 prim_counts[r.primitive] += 1
-        timeline = build_timeline(records)
+        timeline = execution.timeline
         self.timelines.append(timeline)
         self.stats.append(StepStats(
-            step=self.step_idx, n_requests=len(requests), n_pairs=n_pairs,
-            n_priced=len(pairs), n_resident=n_resident,
-            n_dispatches=sum(1 for r in records if not r.backup),
+            step=plan.step, n_requests=len(plan.requests),
+            n_pairs=plan.n_pairs, n_priced=plan.n_priced,
+            n_resident=plan.n_resident,
+            n_dispatches=sum(1 for r in plan.records if not r.backup),
             primitives=dict(prim_counts),
             latency_s=timeline.makespan_s,
-            sched_wall_s=time.perf_counter() - t_wall0,
-            replicas_spawned=replicas_spawned,
-            evictions=self._evictions_this_step,
-            max_dispatch_s=_critical_path(records),
+            sched_wall_s=wall_s,
+            replicas_spawned=plan.replicas_spawned,
+            evictions=plan.evictions,
+            max_dispatch_s=_critical_path(plan.records),
             serial_stage_s=timeline.serial_s,
             stage_totals=timeline.stage_totals()))
-        return records
 
     # -- multi-step driver -----------------------------------------------------
 
@@ -585,7 +504,8 @@ class ServingEngine:
             cm.t_fetch(fab, chunk.length, self.cfg.payload),
             fabric_idx=self.fabric_idx_between(target, chunk.holder),
             link_instance=chunk.holder, home=target,
-            stages=cm.fetch_stages(fab, chunk.length, self.cfg.payload))
+            stages=cm.fetch_stages(fab, chunk.length, self.cfg.payload),
+            req_ids=tuple(p.rq.req_id for p in overflow))
 
     # -- faults ---------------------------------------------------------------
 
@@ -613,3 +533,13 @@ class ServingEngine:
                 and self.stats[step - 1].step == step:
             return self.timelines[step - 1]
         raise KeyError(f"no timeline recorded for step {step}")
+
+    def outputs_of(self, step: int) -> Dict[int, object]:
+        """Exec-backend decode outputs of a past step: req_id -> merged
+        Partial ({} under the analytic backend, and {} once the step falls
+        out of the cfg.retain_outputs window — outputs hold real arrays,
+        so only a bounded history stays live)."""
+        if 1 <= step <= len(self.step_outputs) \
+                and self.stats[step - 1].step == step:
+            return self.step_outputs[step - 1]
+        raise KeyError(f"no outputs recorded for step {step}")

@@ -1,0 +1,200 @@
+"""The PLAN layer of the serving engine (plan / execute / account).
+
+A decode step flows through three layers since ISSUE 3:
+
+  plan    — residency resolution, one vectorized decide_batch() over every
+            non-resident (request, chunk) pair, per-(holder, chunk, fabric)
+            dispatch batching, fan-in capping, fetch persistence. Output: a
+            StepPlan — the full transport schedule for the step, expressed
+            as DispatchRecords plus the residency telemetry.
+  execute — an ExecutionBackend (repro.serving.backends) consumes the plan:
+            the AnalyticBackend schedules it on the PR-2 overlap timeline
+            (pure simulation, today's numbers); the JaxExecBackend ALSO
+            runs the planned attention on real c^KV arrays and returns the
+            decode outputs.
+  account — StepStats built from the plan + the executed timeline.
+
+This module holds the data types the three layers share (and the timeline
+construction both backends use), so engine and backends can import it
+without importing each other.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.serving import timeline as TL
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    home: int                      # requester instance
+    chunk_ids: List[str]
+    m_q: int = 1                   # query rows per chunk this step
+    expected_reuse_steps: int = 1
+    k_selected: Optional[int] = None
+    # deterministic seed for this request's query tensor (exec backend);
+    # None lets the backend derive one from req_id. The ANALYTIC path never
+    # reads it, so traces stay backend-agnostic.
+    query_seed: Optional[int] = None
+
+
+@dataclasses.dataclass
+class DispatchRecord:
+    step: int
+    holder: int
+    primitive: str
+    chunk_id: str
+    n_requesters: int
+    m_q_total: int
+    est_cost_s: float
+    backup: bool = False
+    # timeline inputs: which wire the dispatch occupies (link_instance < 0
+    # means no wire — LOCAL), the requester-side instance for merge/splice,
+    # and the §4 per-stage breakdown the est_cost_s sums over
+    fabric_idx: int = -1
+    link_instance: int = -1
+    home: int = -1
+    stages: cm.StageList = ()
+    # the requests batched into this dispatch (plan -> execute handoff: the
+    # exec backend stacks their query tensors into one holder-side partial)
+    req_ids: Tuple[int, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidentPair:
+    """A (request, chunk) access served by local attention — no transport,
+    so no DispatchRecord; the exec backend still computes its partial."""
+    req_id: int
+    chunk_id: str
+    instance: int
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """One planned decode step: every transport as a DispatchRecord, every
+    free local access as a ResidentPair, plus the planning telemetry the
+    account layer folds into StepStats. Planning COMMITS residency (fetch
+    persistence, replica spawns, LRU evictions) — execution replays the
+    already-decided schedule, it never re-plans."""
+    step: int
+    requests: List[Request]
+    records: List[DispatchRecord]
+    resident_pairs: List[ResidentPair]
+    n_pairs: int                   # (request, chunk) accesses resolved
+    n_priced: int                  # pairs that reached decide_batch
+    n_resident: int                # served by local attention, no transport
+    replicas_spawned: int = 0
+    evictions: int = 0
+
+
+@dataclasses.dataclass
+class StepStats:
+    """Per-step scheduler telemetry (the benchmark's raw material)."""
+    step: int
+    n_requests: int
+    n_pairs: int                   # (request, chunk) accesses resolved
+    n_priced: int                  # pairs that reached decide_batch
+    n_resident: int                # served by local attention, no transport
+    n_dispatches: int              # primary dispatches issued
+    primitives: Dict[str, int]
+    latency_s: float               # makespan of the step's transport timeline
+    sched_wall_s: float            # scheduler wall-clock for this step
+    replicas_spawned: int = 0
+    evictions: int = 0
+    # timeline telemetry: the old independent max-reduce price (what PR 1
+    # reported as latency), the serial sum of every stage, and the summed
+    # duration per stage name
+    max_dispatch_s: float = 0.0
+    serial_stage_s: float = 0.0
+    stage_totals: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def decisions_per_sec(self) -> float:
+        """Predicate evaluations per wall-clock second (resident pairs skip
+        the predicate and are excluded)."""
+        return self.n_priced / self.sched_wall_s if self.sched_wall_s else 0.0
+
+    @property
+    def has_transport(self) -> bool:
+        """False for a fully-resident step: nothing was scheduled, so the
+        0.0 makespan is not a latency any request experienced."""
+        return self.n_dispatches > 0
+
+    @property
+    def overlap_efficiency(self) -> float:
+        """makespan / sum-of-stages (1.0 = fully serial, 1/n = n flows
+        perfectly overlapped; 1.0 for an empty step)."""
+        return (self.latency_s / self.serial_stage_s
+                if self.serial_stage_s > 0 else 1.0)
+
+
+def transport_latencies(stats: Iterable[StepStats]) -> np.ndarray:
+    """Latencies of the steps that actually dispatched work. Fully-resident
+    steps have an empty schedule (latency 0.0); including them would deflate
+    p50/p99 with zeros nobody waited for — aggregation must skip them."""
+    return np.array([s.latency_s for s in stats if s.has_transport],
+                    np.float64)
+
+
+def _backup_of(records: List["DispatchRecord"],
+               i: int) -> Optional["DispatchRecord"]:
+    """The straggler backup shadowing records[i], if any. The planner
+    emits a backup IMMEDIATELY after its primary, so adjacency — not
+    chunk_id alone — is the association: two fabric groups of one chunk
+    each carry their own backup and must not cap each other."""
+    nxt = i + 1
+    if nxt < len(records) and records[nxt].backup \
+            and records[nxt].chunk_id == records[i].chunk_id:
+        return records[nxt]
+    return None
+
+
+def _critical_path(records: List["DispatchRecord"]) -> float:
+    """Independent max-reduce price of one step's records: max over primary
+    dispatches, where a backup caps its own primary's contribution. Through
+    PR 1 this WAS the step latency; it is kept as StepStats.max_dispatch_s —
+    the no-contention floor the timeline makespan is compared against."""
+    worst = 0.0
+    for i, r in enumerate(records):
+        if r.backup:
+            continue
+        cost = r.est_cost_s
+        b = _backup_of(records, i)
+        if b is not None:
+            cost = min(cost, b.est_cost_s)
+        worst = max(worst, cost)
+    return worst
+
+
+def build_timeline(records: List["DispatchRecord"]) -> TL.Timeline:
+    """One step's dispatch records as an overlap-aware schedule.
+
+    A straggler backup replaces its own primary (adjacent record) when it
+    is the cheaper path (the engine cancels the primary at the p99
+    deadline — modeled as the faster of the two serving the chunk),
+    mirroring _critical_path's min. Wire stages bind to the dispatch's
+    (link_instance, fabric) resource, compute to the holder's SM,
+    merge/splice/prefill to the requester's."""
+    flows: List[TL.Flow] = []
+    for i, r in enumerate(records):
+        if r.backup:
+            continue
+        b = _backup_of(records, i)
+        eff = b if b is not None and b.est_cost_s < r.est_cost_s else r
+        if not eff.stages:
+            continue
+        link_res = (TL.link(eff.link_instance, eff.fabric_idx)
+                    if eff.link_instance >= 0 else None)
+        requester = eff.home if eff.home >= 0 else eff.holder
+        flows.append(TL.transport_flow(
+            f"{eff.primitive}:{eff.chunk_id}@{eff.holder}#{i}",
+            eff.stages, link_res=link_res,
+            holder_sm=TL.sm(eff.holder), requester_sm=TL.sm(requester),
+            primitive=eff.primitive, chunk_id=eff.chunk_id))
+    return TL.simulate(flows)

@@ -11,13 +11,21 @@ so popular chunks replicate toward their readers over the run while
 one-shot readers keep routing.
 
 The trace is a plain iterator of per-step List[Request] — the engine's
-run() drives it; bench_serving_steadystate.py measures it.
+run() drives it; bench_serving_steadystate.py measures it. Every Request
+carries a deterministic query_seed (derived from the session id, no extra
+RNG draws), so the SAME trace drives the analytic and the exec backend:
+the analytic path ignores the seed, the exec path materializes the
+request's query tensor from it. materialize_trace / save_trace /
+load_trace snapshot a trace so both backends (or a later session) replay
+the identical request stream.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Sequence
+import json
+import pathlib
+from typing import Iterable, Iterator, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -97,8 +105,62 @@ def agentic_trace(cfg: WorkloadConfig, engine: ServingEngine,
                 req_id=s.req_id, home=s.home,
                 chunk_ids=list(s.working_set), m_q=s.m_q,
                 expected_reuse_steps=max(1, s.steps_left),
-                k_selected=None if s.k_selected < 0 else s.k_selected))
+                k_selected=None if s.k_selected < 0 else s.k_selected,
+                # deterministic in the session id — no RNG draw, so the
+                # request stream is identical with or without exec mode
+                query_seed=cfg.seed * 1_000_003 + s.req_id))
             s.steps_left -= 1
             if s.steps_left <= 0:
                 sessions[i] = spawn()    # departure + fresh arrival
         yield step
+
+
+# ---------------------------------------------------------------------------
+# Trace snapshots: one trace, many consumers (analytic vs exec backend,
+# CLI replays, golden fixtures).
+# ---------------------------------------------------------------------------
+
+def materialize_trace(trace: Iterable[List[Request]]) -> List[List[Request]]:
+    """Exhaust a trace iterator into a replayable list of steps (agentic_
+    trace is a generator — the same object cannot drive two engines)."""
+    return [list(step) for step in trace]
+
+
+def save_trace(path: Union[str, pathlib.Path],
+               trace: Iterable[List[Request]],
+               meta: Optional[dict] = None) -> List[List[Request]]:
+    """Write a trace as JSON (one dict per request); returns the
+    materialized steps so the caller can keep driving them. `meta` rides
+    along (corpus geometry, engine topology, seeds) so a replay can
+    reconstruct the WORLD the trace was recorded against — chunk ids in
+    a trace mean nothing if the corpus is registered differently."""
+    steps = materialize_trace(trace)
+    payload = {
+        "meta": meta or {},
+        "steps": [[dataclasses.asdict(rq) for rq in step]
+                  for step in steps],
+    }
+    pathlib.Path(path).write_text(json.dumps(payload, indent=1) + "\n")
+    return steps
+
+
+def read_trace(path: Union[str, pathlib.Path]
+               ) -> "tuple[dict, List[List[Request]]]":
+    """One parse of a save_trace() JSON -> (meta, per-step Request lists).
+    The bare-list pre-meta format is accepted too (meta = {})."""
+    payload = json.loads(pathlib.Path(path).read_text())
+    if isinstance(payload, dict):
+        meta, raw = payload.get("meta", {}), payload["steps"]
+    else:
+        meta, raw = {}, payload
+    return meta, [[Request(**rq) for rq in step] for step in raw]
+
+
+def load_trace(path: Union[str, pathlib.Path]) -> List[List[Request]]:
+    """Just the steps of a saved trace."""
+    return read_trace(path)[1]
+
+
+def trace_meta(path: Union[str, pathlib.Path]) -> dict:
+    """Just the meta header of a saved trace."""
+    return read_trace(path)[0]

@@ -1,0 +1,73 @@
+"""The three frozen serving-engine scenarios shared by the golden
+regression tests (tests/test_engine_golden.py) and the backend
+parity/exactness tests (tests/test_backends.py).
+
+Keep these REPRODUCIBLE-BY-CONSTRUCTION: fixed request lists, no RNG, no
+wall-clock. Each builder takes an optional ExecutionBackend so the SAME
+trace can drive the analytic engine (golden fixtures) and the exec engine
+(real-array execution).
+"""
+
+from repro.serving.engine import EngineConfig, Request, ServingEngine
+
+
+def _routed_only(backend=None):
+    """Decode-shaped traffic (m_q moderate, reuse 1): every pair ROUTEs;
+    two pods exercise per-fabric dispatch splitting."""
+    eng = ServingEngine(8, pool_tokens=10**6, cfg=EngineConfig(),
+                        instances_per_pod=4, backend=backend)
+    for i in range(6):
+        eng.register_chunk(f"c{i}", holder=i % 4, length=2048)
+    steps = [
+        [Request(0, home=4, chunk_ids=["c0", "c1"], m_q=64),
+         Request(1, home=5, chunk_ids=["c2"], m_q=128),
+         Request(2, home=1, chunk_ids=["c0"], m_q=32)],
+        [Request(0, home=4, chunk_ids=["c0", "c1"], m_q=64),
+         Request(3, home=6, chunk_ids=["c3", "c4"], m_q=16)],
+        [Request(4, home=2, chunk_ids=["c5"], m_q=256)],
+    ]
+    return eng, steps
+
+
+def _fetch_heavy(backend=None):
+    """Long reuse horizons (m_q=1): FETCH wins, persists, then the SAME
+    requests go resident — the last step is empty (no transport at all)."""
+    eng = ServingEngine(4, pool_tokens=10**6, cfg=EngineConfig(),
+                        backend=backend)
+    for i in range(3):
+        eng.register_chunk(f"doc{i}", holder=1 + (i % 3), length=2048)
+    reqs = [Request(i, home=0, chunk_ids=[f"doc{i}"], m_q=1,
+                    expected_reuse_steps=100_000) for i in range(3)]
+    return eng, [reqs, reqs, reqs]
+
+
+def _mixed_congested(backend=None):
+    """One holder serving 4 routed chunks (K=4 on its link: the §8 premium
+    derived from occupancy), a fetchy long-reuse reader, and a tiny chunk
+    whose re-prefill undercuts transport (LOCAL) — all three primitives and
+    the congestion path in one trace."""
+    eng = ServingEngine(8, pool_tokens=10**6, cfg=EngineConfig(),
+                        instances_per_pod=8, backend=backend)
+    for i in range(4):
+        eng.register_chunk(f"hot{i}", holder=1, length=2048)
+    eng.register_chunk("cold", holder=2, length=2048)
+    eng.register_chunk("tiny", holder=1, length=8)
+    steps = [
+        [Request(i, home=3 + i, chunk_ids=[f"hot{i}"], m_q=1024)
+         for i in range(4)]
+        + [Request(10, home=7, chunk_ids=["cold"], m_q=1,
+                   expected_reuse_steps=100_000),
+           Request(11, home=6, chunk_ids=["tiny"], m_q=4096)],
+        [Request(i, home=3 + i, chunk_ids=[f"hot{i}"], m_q=1024)
+         for i in range(2)]
+        + [Request(10, home=7, chunk_ids=["cold"], m_q=1,
+                   expected_reuse_steps=100_000)],
+    ]
+    return eng, steps
+
+
+SCENARIOS = {
+    "routed_only": _routed_only,
+    "fetch_heavy": _fetch_heavy,
+    "mixed_congested": _mixed_congested,
+}
