@@ -37,6 +37,13 @@ class Chunk:
     # spliced copies backing the replicas; None / absent in analytic mode
     data: Optional[Any] = None
     replica_data: Dict[int, Any] = dataclasses.field(default_factory=dict)
+    # selection regime (ISSUE 4): the index SIDECAR — per-token index keys
+    # (length, d_index) materialized alongside c^KV (core.selection
+    # latent_index_keys), with the same replica/eviction lifecycle as the
+    # cache bytes; a holder scores its RESIDENT keys, never remote ones
+    index_keys: Optional[Any] = None
+    replica_index_keys: Dict[int, Any] = dataclasses.field(
+        default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -138,6 +145,38 @@ class ChunkStore:
             return c.data
         return None
 
+    # -- index sidecar (selection regime, ISSUE 4) --------------------------
+
+    def attach_index_keys(self, chunk_id: str, array: Any) -> Chunk:
+        """Bind the per-token index keys to a registered chunk — same
+        leading-axis validation as attach_data (one key per cached token)."""
+        c = self._chunks[chunk_id]
+        n = getattr(array, "shape", (c.length,))[0]
+        if n != c.length:
+            raise ValueError(
+                f"{chunk_id}: {n} index keys, registered {c.length} tokens")
+        c.index_keys = array
+        return c
+
+    def set_replica_index_keys(self, chunk_id: str, instance: int,
+                               array: Any) -> None:
+        """Record the index keys riding along a replica (the sidecar moves
+        with the cache bytes). Same guards as set_replica_data."""
+        c = self._chunks[chunk_id]
+        if instance in c.replicas:
+            c.replica_index_keys[instance] = array
+
+    def index_keys_on(self, chunk_id: str, instance: int) -> Optional[Any]:
+        """The index keys `instance` would score locally — replica sidecar
+        first, canonical keys on the holder, None when nothing is
+        materialized there (mirrors array_on)."""
+        c = self._chunks[chunk_id]
+        if instance in c.replica_index_keys:
+            return c.replica_index_keys[instance]
+        if instance == c.holder:
+            return c.index_keys
+        return None
+
     # -- discovery (cross-instance, by canonical id — §1: reuse that a local
     #    prefix tree cannot capture) --------------------------------------
 
@@ -182,6 +221,7 @@ class ChunkStore:
         if instance in c.replicas:
             c.replicas.remove(instance)
             c.replica_data.pop(instance, None)
+            c.replica_index_keys.pop(instance, None)
             self.free(instance, c.length)
 
     def drop_holder(self, instance: int) -> List[str]:
@@ -194,9 +234,12 @@ class ChunkStore:
                 if c.replicas:
                     c.holder = c.replicas.pop(0)
                     # the promoted replica's spliced copy becomes canonical
-                    # (the dead instance's array is unreachable)
+                    # (the dead instance's array is unreachable) — index
+                    # sidecar promotes with it
                     if c.holder in c.replica_data:
                         c.data = c.replica_data.pop(c.holder)
+                    if c.holder in c.replica_index_keys:
+                        c.index_keys = c.replica_index_keys.pop(c.holder)
                 else:
                     orphaned.append(c.chunk_id)
         for f in self._forks.values():

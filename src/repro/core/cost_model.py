@@ -391,6 +391,89 @@ def local_stages(c_t: int, n_layers: int = C.V2_LITE_LAYERS,
     return (("prefill", t_local(c_t, n_layers, c_per_token_layer)),)
 
 
+# ---------------------------------------------------------------------------
+# Selection regime (§5.4): the distributed indexer service. Per decode step
+# the requester broadcasts a NARROW indexer query (d_index columns, not the
+# full d_qk row) to every holder of a selected chunk; each holder scores its
+# resident index keys (the chunk store's sidecar) and returns its local
+# top-k (block id, score) candidates; the requester merges them into the
+# global top-k. The `index` stage below is one holder's share of that round
+# trip — it rides the same (link, fabric) wire as the transport stages, and
+# the planner prepends it to the ROUTE/FETCH stage chains of selection
+# dispatches. Holder compute then scales with the selection budget resident
+# on the holder (KB), not the store size.
+# ---------------------------------------------------------------------------
+
+INDEX_CANDIDATE_BYTES = 8          # returned (block id i32, score f32) pair
+
+
+def t_index_roundtrip(fabric: Fabric, m_q: int, k_blocks: int,
+                      d_index: int) -> float:
+    """One holder's indexer round trip: ship m_q narrow query rows (d_index
+    bf16 columns — the scoring projection, not the 1152-B wire row), get
+    back <= k_blocks candidates. Scoring compute is folded into the
+    attention compute stage (it is a rank-d_index dot, noise next to it)."""
+    wire_bytes = m_q * d_index * C.BF16 + k_blocks * INDEX_CANDIDATE_BYTES
+    return fabric.t_probe_s + wire_bytes / fabric.bw_Bps
+
+
+def index_stages(fabric: Fabric, m_q: int, k_blocks: int,
+                 d_index: int) -> StageList:
+    """The indexer round trip as a timeline stage (wire class: it occupies
+    the dispatch's (link, fabric) resource like probe/transfer do)."""
+    return (("index", t_index_roundtrip(fabric, m_q, k_blocks, d_index)),)
+
+
+def t_route_selected_full(fabric: Fabric, m_q: int, k_flows: int,
+                          sel_frac: float, k_blocks: int, d_index: int,
+                          payload: Payload = MLA_PAYLOAD,
+                          t_compute: float = np.mean(
+                              C.HOLDER_COMPUTE_DECODE_S),
+                          t_merge: float = C.MERGE_COST_S) -> float:
+    """End-to-end ROUTE under selection: indexer round trip + congested
+    query transport + holder compute scaled by the fraction of the holder's
+    store the selection touches (sel_frac = selected/resident tokens — the
+    budget KB, not the store size) + merge."""
+    return (t_index_roundtrip(fabric, m_q, k_blocks, d_index)
+            + t_route_congested(fabric, m_q, k_flows, payload)
+            + t_compute * sel_frac + t_merge)
+
+
+def route_selected_stages(fabric: Fabric, m_q: int, k_flows: int,
+                          sel_frac: float, k_blocks: int, d_index: int,
+                          payload: Payload = MLA_PAYLOAD,
+                          t_compute: float = np.mean(
+                              C.HOLDER_COMPUTE_DECODE_S),
+                          t_merge: float = C.MERGE_COST_S) -> StageList:
+    """ROUTE under selection as stages: index + the five §4 stages with
+    compute scaled to the selected fraction. Parameter order matches
+    t_route_selected_full (the two must stay in lockstep): the stage sum
+    equals it exactly at the same k_flows."""
+    return index_stages(fabric, m_q, k_blocks, d_index) + route_stages(
+        fabric, m_q, k_flows, payload, t_compute * sel_frac, t_merge)
+
+
+def t_fetch_selected(fabric: Fabric, k_local: float, m_q: int, k_blocks: int,
+                     d_index: int, payload: Payload = MLA_PAYLOAD) -> float:
+    """End-to-end FETCH under selection, per holder: indexer round trip +
+    scattered gather of the k_local entries chosen on this holder (no
+    splice — canonical positions; never amortised — the selection is
+    re-chosen every step, §5.4)."""
+    return (t_index_roundtrip(fabric, m_q, k_blocks, d_index)
+            + t_fetch_scattered(fabric, k_local, 1, payload))
+
+
+def fetch_selected_stages(fabric: Fabric, k_local: float, m_q: int,
+                          k_blocks: int, d_index: int,
+                          payload: Payload = MLA_PAYLOAD) -> StageList:
+    """FETCH under selection as stages: index + one gather wire stage.
+    Summed over a selection's M holders, the gather stages reproduce the
+    closed-form t_fetch_scattered(k_total, M) exactly (M handshakes + the
+    budget's bytes) — bench_scatter_gather asserts the identity."""
+    return index_stages(fabric, m_q, k_blocks, d_index) + (
+        ("gather", t_fetch_scattered(fabric, k_local, 1, payload)),)
+
+
 def scale_stages(stages: StageList, factor: float) -> StageList:
     """Scale every stage duration (holder/requester slowdown)."""
     if factor == 1.0:

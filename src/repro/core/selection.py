@@ -60,14 +60,23 @@ def topk_tokens(scores: jax.Array, k: int) -> jax.Array:
 
 def topk_blocks(scores: jax.Array, block_tokens: int, k_blocks: int):
     """Block-granular selection (NSA / TPU-native): aggregate token scores per
-    64-token block, keep the top-k_blocks blocks. Returns (block_idx (..,
-    k_blocks), token mask construction helper)."""
+    64-token block, keep the top-k_blocks blocks. Returns block_idx
+    (.., k_blocks) — k_blocks clamped to the block count.
+
+    The tail is PADDED to the block boundary with -inf, so a partial last
+    block competes on its real token scores (truncating it instead would make
+    the score tail unselectable no matter how relevant — the S % block_tokens
+    bug ISSUE 4 fixes). block_mask_to_tokens agrees on the padded length."""
     s = scores.shape[-1]
-    n_blocks = s // block_tokens
-    blocked = scores[..., : n_blocks * block_tokens].reshape(
-        scores.shape[:-1] + (n_blocks, block_tokens))
+    n_blocks = -(-s // block_tokens)                    # ceil: tail counts
+    pad = n_blocks * block_tokens - s
+    if pad:
+        scores = jnp.pad(scores,
+                         [(0, 0)] * (scores.ndim - 1) + [(0, pad)],
+                         constant_values=-jnp.inf)
+    blocked = scores.reshape(scores.shape[:-1] + (n_blocks, block_tokens))
     block_scores = jnp.max(blocked, axis=-1)
-    _, idx = jax.lax.top_k(block_scores, k_blocks)
+    _, idx = jax.lax.top_k(block_scores, min(k_blocks, n_blocks))
     return idx
 
 
@@ -80,11 +89,40 @@ def selection_mask(idx_tokens: jax.Array, seq_len: int) -> jax.Array:
 
 def block_mask_to_tokens(block_idx: jax.Array, block_tokens: int,
                          seq_len: int) -> jax.Array:
-    """(.., kb) block indices -> (.., S) token mask."""
-    n_blocks = seq_len // block_tokens
+    """(.., kb) block indices -> (.., S) token mask. Counts blocks on the
+    same padded length topk_blocks selects over (ceil, so the tail block is
+    addressable), then truncates the mask back to seq_len."""
+    n_blocks = -(-seq_len // block_tokens)
     onehot = jax.nn.one_hot(block_idx, n_blocks, dtype=jnp.bool_)
     blocks = jnp.any(onehot, axis=-2)                       # (.., n_blocks)
-    return jnp.repeat(blocks, block_tokens, axis=-1)
+    return jnp.repeat(blocks, block_tokens, axis=-1)[..., :seq_len]
+
+
+def latent_index_keys(ckv, d_index: int):
+    """The parameter-free DSA index-key rule the decode path of
+    models/model.py scores with: a token's index key IS the leading d_index
+    latent columns of its c^KV entry (the position-invariant band — k_rope
+    never enters the score, so keys need no re-rotation when a chunk moves).
+    This is what the chunk store materializes as the index SIDECAR
+    (Chunk.index_keys) next to the cache bytes; works on jax or numpy
+    arrays (it is just a slice)."""
+    return ckv[..., :d_index]
+
+
+def block_scores(scores, block_tokens: int):
+    """numpy mirror of topk_blocks' padded block aggregation, for the
+    host-side serving indexer (repro.serving.selection): per-block max of
+    token scores, tail padded to the boundary with -inf so a partial last
+    block competes on its real scores. (.., S) -> (.., ceil(S/bt))."""
+    import numpy as np
+    s = np.asarray(scores)
+    n = s.shape[-1]
+    n_blocks = -(-n // block_tokens)
+    pad = n_blocks * block_tokens - n
+    if pad:
+        s = np.concatenate(
+            [s, np.full(s.shape[:-1] + (pad,), -np.inf, s.dtype)], axis=-1)
+    return s.reshape(s.shape[:-1] + (n_blocks, block_tokens)).max(axis=-1)
 
 
 def residency_split(idx_tokens: jax.Array, shard_bounds) -> list:

@@ -9,6 +9,17 @@ pluggable execution backend (ISSUE 3):
     # plan AND execute on real c^KV arrays, verifying §3.3 exactness
     PYTHONPATH=src python -m repro.launch.serve --backend exec --verify
 
+    # the §5.4 selection regime end-to-end (ISSUE 4): the distributed
+    # indexer scores/selects per step, the backends scatter-attend the
+    # masks, selection requests verify against the selection_k oracle
+    PYTHONPATH=src python -m repro.launch.serve --selection \
+        --selection-k 128 --backend exec --verify \
+        --save-selection-trace /tmp/sel.json
+    # ... and a recorded selection trace replays through the planner
+    # (numpy-only: no jax needed to PRICE the regime from a trace)
+    PYTHONPATH=src python -m repro.launch.serve \
+        --selection-trace /tmp/sel.json --selection-k 128
+
     # replay a saved trace (the SAME trace drives both backends)
     PYTHONPATH=src python -m repro.launch.serve --save-trace /tmp/t.json
     PYTHONPATH=src python -m repro.launch.serve --trace /tmp/t.json \
@@ -41,6 +52,11 @@ from repro.serving.workload import (WorkloadConfig, agentic_trace,
 # must reconstruct them from the trace's meta header, not trust the flags
 TRACE_META_ARGS = ("instances", "pods", "chunks", "chunk_tokens",
                    "agents", "steps", "seed")
+# a SELECTION trace additionally depends on the workload's selection knobs:
+# k_selected flows into every selection dispatch's pricing (kb_wire, the
+# predicate's k column) and selection_frac decides WHICH sessions select —
+# replaying with different values would silently produce different StepStats
+SELECTION_META_ARGS = TRACE_META_ARGS + ("selection_k", "selection_frac")
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -69,7 +85,38 @@ def build_parser() -> argparse.ArgumentParser:
                          "register before building the engine")
     ap.add_argument("--intra-fabric", default="tpu_ici")
     ap.add_argument("--cross-fabric", default="tpu_dcn")
+    # §5.4 selection regime (ISSUE 4)
+    ap.add_argument("--selection", action="store_true",
+                    help="run the distributed indexer service: score -> "
+                         "select -> scatter-attend through the scheduler")
+    ap.add_argument("--selection-k", type=int, default=2048,
+                    help="per-request selection budget in tokens (the "
+                         "workload's k_selected)")
+    ap.add_argument("--selection-frac", type=float, default=0.1,
+                    help="fraction of agent sessions in the selection "
+                         "regime (workload generator)")
+    ap.add_argument("--block-tokens", type=int, default=64,
+                    help="NSA selection granularity (indexer block size)")
+    ap.add_argument("--selection-trace", default="",
+                    help="replay a recorded selection trace through the "
+                         "planner (numpy-only) instead of live scoring")
+    ap.add_argument("--save-selection-trace", default="",
+                    help="with --selection: record the indexer's per-step "
+                         "verdicts as JSON")
     return ap
+
+
+def build_selector(args):
+    """The engine's selection seam: live indexer (--selection), recorded
+    trace (--selection-trace, numpy-only), or None (selection requests are
+    priced but executed dense — the engine warns once and counts them)."""
+    if args.selection:
+        from repro.serving.selection import IndexerService, SelectionConfig
+        return IndexerService(SelectionConfig(block_tokens=args.block_tokens))
+    if args.selection_trace:
+        from repro.serving.selection import ReplaySelector
+        return ReplaySelector(args.selection_trace)
+    return None
 
 
 def build_engine(args) -> ServingEngine:
@@ -85,17 +132,19 @@ def build_engine(args) -> ServingEngine:
         cfg=EngineConfig(intra_pod_fabric=args.intra_fabric,
                          cross_pod_fabric=args.cross_fabric),
         instances_per_pod=max(1, args.instances // args.pods),
-        backend=backend)
+        backend=backend, selector=build_selector(args))
 
 
-def apply_trace_meta(args, meta: dict) -> None:
+def apply_trace_meta(args, meta: dict, keys=TRACE_META_ARGS,
+                     source: str = "--trace") -> None:
     """A replayed trace's chunk ids, homes and seeds only mean anything in
     the world they were recorded against: override the world-defining args
     from the trace's meta header (flag mismatches would otherwise silently
     change every decision — or crash on unknown chunk ids)."""
-    for key in TRACE_META_ARGS:
+    for key in keys:
         if key in meta and meta[key] != getattr(args, key):
-            print(f"[serve] --trace meta overrides --{key.replace('_', '-')}"
+            print(f"[serve] {source} meta overrides "
+                  f"--{key.replace('_', '-')}"
                   f": {getattr(args, key)} -> {meta[key]}")
             setattr(args, key, meta[key])
 
@@ -107,7 +156,9 @@ def build_trace(args, eng: ServingEngine, replay=None):
     meta-overridden) geometry args."""
     wl = WorkloadConfig(n_steps=args.steps, agents=args.agents,
                         n_corpus_chunks=args.chunks,
-                        chunk_tokens=args.chunk_tokens, seed=args.seed)
+                        chunk_tokens=args.chunk_tokens, seed=args.seed,
+                        selection_frac=args.selection_frac,
+                        k_selected=args.selection_k)
     cids = register_corpus(eng, wl)
     if replay is not None:
         return replay
@@ -126,10 +177,24 @@ def main(argv=None) -> None:
     if args.trace and args.save_trace:
         raise SystemExit("--save-trace records a GENERATED trace; it cannot "
                          "be combined with --trace (replay)")
+    if args.selection and args.selection_trace:
+        raise SystemExit("--selection scores live; it cannot be combined "
+                         "with --selection-trace (replay)")
+    if args.save_selection_trace and not args.selection:
+        raise SystemExit("--save-selection-trace records the live "
+                         "indexer's verdicts: it requires --selection")
     replay = None
     if args.trace:
         meta, replay = read_trace(args.trace)
         apply_trace_meta(args, meta)
+    if args.selection_trace:
+        # the selection trace defines its world too — including the
+        # selection knobs, which flow into pricing (bit-identical replay
+        # requires the recorded k/frac, not whatever the flags say)
+        from repro.serving.selection import load_selection_trace
+        sel_meta, _ = load_selection_trace(args.selection_trace)
+        apply_trace_meta(args, sel_meta, keys=SELECTION_META_ARGS,
+                         source="--selection-trace")
     eng = build_engine(args)
     steps = build_trace(args, eng, replay)
 
@@ -139,10 +204,28 @@ def main(argv=None) -> None:
         line = (f"[serve] step {s.step}: {len(recs)} dispatches "
                 f"{s.primitives}, {s.n_resident}/{s.n_pairs} resident, "
                 f"makespan {s.latency_s*1e6:.0f}us")
+        if eng.selector is not None:
+            line += f", {s.n_selected} selected pairs"
         if args.verify:
             from repro.serving.backends.jax_exec import max_oracle_err
             line += f", max|err| {max_oracle_err(eng, reqs, s.step):.2e}"
         print(line)
+
+    if args.save_selection_trace:
+        from repro.serving.selection import save_selection_trace
+        save_selection_trace(args.save_selection_trace, eng.selector.log,
+                             eng.selector.block_tokens, eng.selector.d_index,
+                             meta={key: getattr(args, key)
+                                   for key in SELECTION_META_ARGS})
+        print(f"[serve] selection trace -> {args.save_selection_trace} "
+              f"({len(eng.selector.log)} steps)")
+    if eng.selector is not None:
+        index_s = sum(s.stage_totals.get("index", 0.0) for s in eng.stats)
+        mk = sum(s.latency_s for s in eng.stats)
+        print(f"[serve] selection: selector={eng.selector.name}, "
+              f"{sum(s.n_selected for s in eng.stats)} selected pairs, "
+              f"indexer-stage share of makespan "
+              f"{index_s / mk if mk else 0.0:.3f}")
 
     lat = transport_latencies(eng.stats)
     n_route = sum(1 for r in eng.log if r.primitive == "route")

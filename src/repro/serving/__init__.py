@@ -12,9 +12,14 @@ from repro.serving.workload import (WorkloadConfig, agentic_trace,
 
 
 def __getattr__(name: str):
-    # lazy: JaxExecBackend needs jax; everything above is numpy-only and
-    # must stay importable without it (see repro.serving.backends).
+    # lazy: JaxExecBackend / IndexerService need jax; everything above is
+    # numpy-only and must stay importable without it (see
+    # repro.serving.backends and repro.serving.selection).
     if name in ("JaxExecBackend", "TINY_MLA"):
         from repro.serving import backends
         return getattr(backends, name)
+    if name in ("IndexerService", "SelectionConfig", "ReplaySelector",
+                "RequestSelection"):
+        from repro.serving import selection
+        return getattr(selection, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

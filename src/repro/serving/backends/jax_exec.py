@@ -18,6 +18,17 @@ group; this backend EXECUTES those decisions:
   requester (same deterministic materialization) and attended locally.
 * resident pairs (no transport planned) attend their local copy.
 
+Under an ACTIVE selection (ISSUE 4 — the plan carries the indexer's masks
+in StepPlan.selections), every primitive narrows to the chosen set:
+ROUTE executes as a MASKED partial on the holder (selected & resident in
+place — "the indexer's choice made distributed", §5.4; semantically the
+block-sparse attend kernels/sparse_select computes), FETCH becomes the
+scattered gather core.splice models (pull ONLY the selected entries at
+canonical positions — no splice, nothing persisted), LOCAL and resident
+accesses attend through the mask. The merged outputs then reproduce
+single-instance selection_k decode (the DSA path of models/model.py) to
+float round-off — selection_oracle_partial is that reference.
+
 Every request's per-chunk partials merge through the online-softmax merge
 (core.merge) — associative + commutative with identity — so the final
 output per request equals single-instance attention over the concatenated
@@ -37,6 +48,7 @@ from typing import Dict, List, Optional, TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.chunk_store import ChunkStore
 from repro.core.merge import Partial, merge_tree
@@ -96,16 +108,41 @@ def oracle_partial(cfg: MLAConfig, store: ChunkStore, rq: Request,
     return absorbed_partial(cfg, q, cat)
 
 
+def selection_oracle_partial(cfg: MLAConfig, store: ChunkStore, rq: Request,
+                             sel, step: int, dtype=jnp.float32) -> Partial:
+    """The selection-regime exactness reference: single-instance
+    selection_k decode — the DSA path of models/model.py lifted to the
+    serving cache. One instance holds the request's CONCATENATED chunks,
+    applies the GLOBAL selection mask (sel: a RequestSelection), and
+    attends the chosen entries in place (canonical positions — no
+    re-rotation, §3.3). The scheduler-driven scatter-attend must reproduce
+    this to float round-off regardless of how the selection was split
+    across holders or which primitives served the shards."""
+    q = query_for(cfg, rq, step, dtype)
+    cat = jnp.concatenate([store.lookup(c).data for c in rq.chunk_ids],
+                          axis=0)
+    gmask = np.concatenate([np.asarray(sel.masks[c]) for c in rq.chunk_ids])
+    return absorbed_partial(cfg, q, cat, jnp.asarray(gmask))
+
+
 def max_oracle_err(engine: "ServingEngine", reqs: List[Request],
                    step: int) -> float:
     """Worst |exec output - oracle| over a step's requests. The engine
-    must be running a JaxExecBackend (its cfg/dtype define the oracle)."""
+    must be running a JaxExecBackend (its cfg/dtype define the oracle).
+    Requests under an active selection verify against the selection
+    oracle; everything else against dense single-instance attention."""
     backend = engine.backend
     outs = engine.outputs_of(step)
+    sels = (engine.plans[step - 1].selections
+            if 1 <= step <= len(engine.plans) else {})
     worst = 0.0
     for rq in reqs:
-        want = oracle_partial(backend.cfg, engine.store, rq, step,
-                              backend.dtype)
+        sel = sels.get(rq.req_id)
+        want = (selection_oracle_partial(backend.cfg, engine.store, rq, sel,
+                                         step, backend.dtype)
+                if sel is not None else
+                oracle_partial(backend.cfg, engine.store, rq, step,
+                               backend.dtype))
         worst = max(worst, float(jnp.max(
             jnp.abs(outs[rq.req_id].o - want.o))))
     return worst
@@ -150,6 +187,7 @@ class JaxExecBackend:
         store = engine.store
         reqs: Dict[int, Request] = {rq.req_id: rq for rq in plan.requests}
         queries: Dict[int, jax.Array] = {}
+        sels = plan.selections
 
         def q_of(rid: int) -> jax.Array:
             if rid not in queries:
@@ -157,38 +195,63 @@ class JaxExecBackend:
                                          self.dtype)
             return queries[rid]
 
+        def mask_of(rid: int, chunk_id: str) -> Optional[jax.Array]:
+            """The indexer's (c_t,) token mask for this access, or None in
+            the dense regime (plan.selections is the §5.4 handoff)."""
+            sel = sels.get(rid)
+            if sel is None:
+                return None
+            return jnp.asarray(np.asarray(sel.masks[chunk_id]))
+
         parts: Dict[int, List[Partial]] = defaultdict(list)
 
-        # resident accesses: local attention on the instance's copy
+        # resident accesses: local attention on the instance's copy,
+        # through the selection mask when the indexer chose for this request
         for rp in plan.resident_pairs:
             arr = self._array_on(store, rp.chunk_id, rp.instance)
             parts[rp.req_id].append(
-                absorbed_partial(self.cfg, q_of(rp.req_id), arr))
+                absorbed_partial(self.cfg, q_of(rp.req_id), arr,
+                                 mask_of(rp.req_id, rp.chunk_id)))
 
         for rec in plan.records:
             if rec.backup or not rec.req_ids:
                 continue
             if rec.primitive == "route":
-                self._exec_route(store, rec, q_of, parts)
+                self._exec_route(store, rec, q_of, parts, mask_of)
             elif rec.primitive in ("fetch", "fetch_replica"):
-                self._exec_fetch(store, rec, q_of, parts)
+                if rec.req_ids[0] in sels:
+                    self._exec_fetch_selected(store, rec, q_of, parts,
+                                              sels[rec.req_ids[0]])
+                else:
+                    self._exec_fetch(store, rec, q_of, parts)
             else:                                     # local re-prefill
                 arr = self.ensure_chunk_data(store, rec.chunk_id)
                 for rid in rec.req_ids:
                     parts[rid].append(
-                        absorbed_partial(self.cfg, q_of(rid), arr))
+                        absorbed_partial(self.cfg, q_of(rid), arr,
+                                         mask_of(rid, rec.chunk_id)))
 
         outputs = {rid: merge_tree(ps) for rid, ps in parts.items()}
         return StepExecution(timeline=build_timeline(plan.records),
                              outputs=outputs, backend=self.name)
 
-    def _exec_route(self, store: ChunkStore, rec, q_of, parts) -> None:
+    def _exec_route(self, store: ChunkStore, rec, q_of, parts,
+                    mask_of) -> None:
         """One batched dispatch: stack the group's queries, one holder-side
-        partial over the holder's resident copy, slice back per request."""
+        partial over the holder's resident copy, slice back per request.
+        A selection-regime dispatch (single-request by construction)
+        routes as a MASKED partial — the holder attends selected &
+        resident in place (§5.4), the block-sparse shape
+        kernels/sparse_select computes."""
         holder_arr = self._array_on(store, rec.chunk_id, rec.holder)
         qs = [q_of(rid) for rid in rec.req_ids]
-        stacked = jnp.concatenate(qs, axis=0) if len(qs) > 1 else qs[0]
-        merged = route_batched(self.cfg, [stacked], [[holder_arr]])[0]
+        mask = mask_of(rec.req_ids[0], rec.chunk_id)
+        if mask is not None:
+            merged = route_batched(self.cfg, [qs[0]], [[holder_arr]],
+                                   masks=[[mask]])[0]
+        else:
+            stacked = jnp.concatenate(qs, axis=0) if len(qs) > 1 else qs[0]
+            merged = route_batched(self.cfg, [stacked], [[holder_arr]])[0]
         off = 0
         for rid, q in zip(rec.req_ids, qs):
             n = q.shape[0]
@@ -209,5 +272,34 @@ class JaxExecBackend:
         dest = rec.home
         if dest >= 0 and store.resident_on(rec.chunk_id, dest):
             store.set_replica_data(rec.chunk_id, dest, moved)
+            # the index SIDECAR moves with the cache bytes: keys derive
+            # from the latent band only (position-invariant — the splice
+            # touches just the rope band), so the replica's keys are the
+            # canonical ones when they have been materialized
+            keys = store.lookup(rec.chunk_id).index_keys
+            if keys is not None:
+                store.set_replica_index_keys(rec.chunk_id, dest, keys)
         for rid in rec.req_ids:
             parts[rid].append(absorbed_partial(self.cfg, q_of(rid), moved))
+
+    def _exec_fetch_selected(self, store: ChunkStore, rec, q_of, parts,
+                             sel) -> None:
+        """FETCH under selection: the scattered gather (§5.4) — pull ONLY
+        the selected entries from the holder's copy, at their canonical
+        positions (NO splice: re-rotating a selection diverges, see
+        core/splice), attend them at the requester, persist nothing (the
+        selection is re-chosen every step). Single-process form of
+        core.splice.fetch_scattered_gather + local attend."""
+        rid = rec.req_ids[0]
+        idx = np.nonzero(np.asarray(sel.masks[rec.chunk_id]))[0]
+        if idx.size == 0:
+            # the indexer chose nothing on this holder: the gather is
+            # empty and the request's partial is the merge identity
+            q = q_of(rid)
+            parts[rid].append(Partial.identity(
+                q.shape[:-1], self.cfg.kv_lora_rank))
+            return
+        src_arr = self._array_on(store, rec.chunk_id, rec.holder)
+        gathered = jnp.take(src_arr, jnp.asarray(idx), axis=0)
+        parts[rid].append(
+            absorbed_partial(self.cfg, q_of(rid), gathered))

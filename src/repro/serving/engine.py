@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import defaultdict
 from typing import Dict, Iterable, List, Optional, Tuple
 
@@ -101,7 +102,8 @@ class ServingEngine:
     def __init__(self, n_instances: int, pool_tokens: int,
                  cfg: EngineConfig = EngineConfig(),
                  instances_per_pod: int = 0,
-                 backend: Optional[ExecutionBackend] = None):
+                 backend: Optional[ExecutionBackend] = None,
+                 selector=None):
         self.cfg = cfg
         self.store = ChunkStore(n_instances, pool_tokens)
         ipp = instances_per_pod or n_instances
@@ -111,6 +113,13 @@ class ServingEngine:
             from repro.serving.backends.analytic import AnalyticBackend
             backend = AnalyticBackend()
         self.backend: ExecutionBackend = backend
+        # §5.4 selection regime (ISSUE 4): the indexer that turns a
+        # request's k_selected budget into per-(request, holder) masks —
+        # repro.serving.selection.IndexerService (live scoring) or
+        # ReplaySelector (recorded trace). None: selection requests are
+        # PRICED but executed dense, warn-once + counted in StepStats.
+        self.selector = selector
+        self._warned_selection_fallback = False
         self.log: List[DispatchRecord] = []
         self.stats: List[StepStats] = []
         self.plans: List[StepPlan] = []          # parallel to self.stats
@@ -187,8 +196,28 @@ class ServingEngine:
         n_resident = 0
         n_pairs = 0
 
+        # -- phase 0: the indexer's selections (§5.4, ISSUE 4) --------------
+        # score -> select happens BEFORE residency resolution: the masks are
+        # a per-request property (the global top-k over the request's
+        # chunks), independent of which holder ends up serving each shard.
+        selections: Dict[int, object] = {}
+        selection_fallbacks = 0
+        sel_reqs = [rq for rq in requests if rq.k_selected is not None]
+        if sel_reqs:
+            if self.selector is not None:
+                selections = self.selector.select_step(self, sel_reqs,
+                                                       self.step_idx)
+            else:
+                selection_fallbacks = len(sel_reqs)
+                self._warn_selection_fallback()
+        # distinct instances a request's selection spans — the M of the
+        # §5.4 fan-out/gather the predicate prices (resident shards count
+        # their home)
+        span: Dict[int, set] = {rid: set() for rid in selections}
+
         # -- phase 1: residency resolution ---------------------------------
         for rq in requests:
+            selected = rq.req_id in selections
             for cid in rq.chunk_ids:
                 n_pairs += 1
                 chunk = self.store.lookup(cid)
@@ -211,10 +240,14 @@ class ServingEngine:
                     if self.store.capacity_left(rq.home) >= chunk.length:
                         self.store.allocate(rq.home, chunk.length)
                         chunk.holder = rq.home
+                    if selected:
+                        span[rq.req_id].add(rq.home)
                     continue
                 # nearest live holder by fabric probe (home wins if resident)
                 holder = min(holders, key=lambda h: 0.0 if h == rq.home
                              else self.fabric_between(rq.home, h).t_probe_s)
+                if selected:
+                    span[rq.req_id].add(holder)
                 if holder == rq.home:
                     n_resident += 1    # resident: free local attention
                     resident_pairs.append(
@@ -226,6 +259,14 @@ class ServingEngine:
 
         # -- phase 2: one vectorized predicate over all pairs ---------------
         if pairs:
+            # under an ACTIVE selection, the predicate's n_holders is the M
+            # the request's selection SPANS (the §5.4 fan-out/gather width),
+            # not the chunk's replica count; without a selector the historic
+            # per-chunk count is kept so priced-only runs stay bit-stable
+            def _n_holders(p: _Pair) -> int:
+                if p.rq.req_id in selections:
+                    return max(1, len(span[p.rq.req_id]))
+                return p.n_holders
             batch = P.RequestBatch(
                 fabrics=self._fa,
                 m_q=np.array([p.rq.m_q for p in pairs], np.int64),
@@ -236,7 +277,7 @@ class ServingEngine:
                 k_selected=np.array(
                     [-1 if p.rq.k_selected is None else p.rq.k_selected
                      for p in pairs], np.int64),
-                n_holders=np.array([p.n_holders for p in pairs], np.int64),
+                n_holders=np.array([_n_holders(p) for p in pairs], np.int64),
                 position_delta=np.ones(len(pairs), np.int64),
                 holder_can_compute=np.ones(len(pairs), bool),
                 host_overhead=np.zeros(len(pairs), bool),
@@ -250,7 +291,13 @@ class ServingEngine:
             # the observed per-link flow count re-prices the batch. (One
             # relaxation round: a group the congested pass flips to LOCAL
             # still counts toward the occupancy its neighbours saw.)
-            group_keys = [(p.holder, p.chunk_id, p.fabric_idx) for p in pairs]
+            # selection pairs group PER REQUEST (4th key component): each
+            # request's masks differ, and its indexer round trip + masked
+            # partial is its own flow on the holder's link — dense pairs
+            # keep the historic 3-way batching (srid = -1)
+            group_keys = [(p.holder, p.chunk_id, p.fabric_idx,
+                           p.rq.req_id if p.rq.req_id in selections else -1)
+                          for p in pairs]
             if self.cfg.congestion_aware:
                 dec0 = P.decide_batch(batch, None)
                 k_flows = self._occupancy_k_flows(pairs, group_keys, dec0)
@@ -265,7 +312,7 @@ class ServingEngine:
             group_keys, k_flows, dec = [], None, None
 
         # -- phase 3: dispatch batching + fan-in + persistence --------------
-        groups: Dict[Tuple[int, str, int], List[int]] = defaultdict(list)
+        groups: Dict[Tuple[int, str, int, int], List[int]] = defaultdict(list)
         for i, key in enumerate(group_keys):
             groups[key].append(i)
         # fan-in cap is a property of the HOLDER's compute elbow: per
@@ -274,15 +321,19 @@ class ServingEngine:
         route_budget: Dict[Tuple[int, str], int] = defaultdict(
             lambda: self.cfg.fanin_cap)
 
-        for (holder, cid, fi), idxs in sorted(groups.items(),
-                                              key=lambda kv: kv[0][:2]):
+        for (holder, cid, fi, srid), idxs in sorted(groups.items(),
+                                                    key=lambda kv: kv[0][:2]):
             entries = [pairs[i] for i in idxs]
             votes = defaultdict(int)
             for i in idxs:
                 votes[int(dec.code[i])] += 1
             code = max(votes, key=votes.get)
             primitive = P.PRIMITIVE_BY_CODE[code].value
-            if primitive == "route":
+            sel = selections.get(srid) if srid >= 0 else None
+            # selection routes sit outside the §6.3 fan-in budget: the
+            # elbow is a FULL-chunk batched-partial property, and selected
+            # compute is scaled to the budget KB far below it
+            if primitive == "route" and sel is None:
                 keep = min(len(idxs), max(0, route_budget[(holder, cid)]))
                 if keep < len(idxs):
                     # beyond the elbow: spawn a replica (amortised FETCH)
@@ -332,6 +383,46 @@ class ServingEngine:
             # shared (link, fabric) resource — while est_cost_s keeps the
             # congested closed form the predicate priced the pairs with
             dest = self._busiest_home(entries)
+            if sel is not None:
+                # §5.4 selection dispatch: the indexer round trip leads the
+                # stage chain, holder compute/gather scale with the budget
+                # resident HERE (selected & resident — possibly 0: the
+                # query still fans out, the partial merges as identity),
+                # FETCH gathers scattered entries and never persists (the
+                # selection is re-chosen next step), and no straggler
+                # backup shadows it.
+                rq0 = entries[0].rq
+                bt = self.selector.block_tokens
+                # candidates on the wire: the budget in blocks, capped by
+                # what this holder could possibly return
+                kb_wire = min(max(1, -(-int(rq0.k_selected) // bt)),
+                              max(1, -(-chunk.length // bt)))
+                k_local = sel.k_on(cid)
+                d_index = self.selector.d_index
+                if primitive == "route":
+                    kf = (int(k_flows[idxs[0]])
+                          if self.cfg.congestion_aware else 0)
+                    frac = min(1.0, k_local / max(1, chunk.length))
+                    cost = cm.t_route_selected_full(
+                        fab, m_q_total, kf, frac, kb_wire, d_index,
+                        self.cfg.payload)
+                    stages = cm.route_selected_stages(
+                        fab, m_q_total, 0, frac, kb_wire, d_index,
+                        self.cfg.payload)
+                else:          # fetch: scattered gather of the local picks
+                    cost = cm.t_fetch_selected(
+                        fab, k_local, m_q_total, kb_wire, d_index,
+                        self.cfg.payload)
+                    stages = cm.fetch_selected_stages(
+                        fab, k_local, m_q_total, kb_wire, d_index,
+                        self.cfg.payload)
+                sd = self.instances[holder].slowdown
+                records.append(DispatchRecord(
+                    self.step_idx, holder, primitive, cid, n_req, m_q_total,
+                    cost * sd, fabric_idx=fi, link_instance=holder,
+                    home=dest, stages=cm.scale_stages(stages, sd),
+                    req_ids=tuple(p.rq.req_id for p in entries)))
+                continue
             if primitive == "route":
                 kf = (int(k_flows[idxs[0]])
                       if self.cfg.congestion_aware else 0)
@@ -400,7 +491,26 @@ class ServingEngine:
             resident_pairs=resident_pairs, n_pairs=n_pairs,
             n_priced=len(pairs), n_resident=n_resident,
             replicas_spawned=replicas_spawned,
-            evictions=self._evictions_this_step)
+            evictions=self._evictions_this_step,
+            selections=selections,
+            selection_fallbacks=selection_fallbacks)
+
+    def _warn_selection_fallback(self) -> None:
+        """A request carried k_selected but no selector is configured: the
+        predicate PRICES the §5.4 selection regime while both backends
+        execute dense full-chunk attention. Warn once per engine and count
+        every occurrence in StepStats.selection_fallbacks, so priced-vs-
+        executed regimes can never diverge silently (ISSUE 4)."""
+        if self._warned_selection_fallback:
+            return
+        self._warned_selection_fallback = True
+        warnings.warn(
+            "requests carry k_selected but the engine has no selection "
+            "service: the selection regime is priced but executed as dense "
+            "full-chunk attention (recorded in StepStats.selection_"
+            "fallbacks). Pass selector=IndexerService() "
+            "(repro.serving.selection) or a ReplaySelector to run the "
+            "indexer.", RuntimeWarning, stacklevel=3)
 
     # -- PLAN -> EXECUTE -> ACCOUNT --------------------------------------------
 
@@ -443,7 +553,10 @@ class ServingEngine:
             evictions=plan.evictions,
             max_dispatch_s=_critical_path(plan.records),
             serial_stage_s=timeline.serial_s,
-            stage_totals=timeline.stage_totals()))
+            stage_totals=timeline.stage_totals(),
+            n_selected=sum(len(rq.chunk_ids) for rq in plan.requests
+                           if rq.req_id in plan.selections),
+            selection_fallbacks=plan.selection_fallbacks))
 
     # -- multi-step driver -----------------------------------------------------
 

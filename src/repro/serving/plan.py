@@ -91,6 +91,14 @@ class StepPlan:
     n_resident: int                # served by local attention, no transport
     replicas_spawned: int = 0
     evictions: int = 0
+    # selection regime (ISSUE 4): the indexer's per-request verdicts
+    # (req_id -> RequestSelection, repro.serving.selection.types) — the
+    # plan->execute handoff of the §5.4 masks; empty when no selector ran
+    selections: Dict[int, object] = dataclasses.field(default_factory=dict)
+    # requests that carried k_selected but had NO selector to run: priced
+    # as selection, executed dense — counted so the regimes cannot diverge
+    # silently (the engine also warns once)
+    selection_fallbacks: int = 0
 
 
 @dataclasses.dataclass
@@ -113,6 +121,12 @@ class StepStats:
     max_dispatch_s: float = 0.0
     serial_stage_s: float = 0.0
     stage_totals: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # selection regime (ISSUE 4): pairs served under an ACTIVE indexer
+    # selection this step, and requests that were priced as selection but
+    # executed dense because no selector was configured (warn-once +
+    # recorded here, so the divergence is always visible in telemetry)
+    n_selected: int = 0
+    selection_fallbacks: int = 0
 
     @property
     def decisions_per_sec(self) -> float:

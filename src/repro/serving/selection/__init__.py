@@ -1,0 +1,20 @@
+"""The distributed indexer subsystem (§5.4, ISSUE 4): score -> select ->
+scatter-attend through the scheduler.
+
+Numpy-only pieces (types, trace replay) import eagerly — the planner and
+the ReplaySelector must work without jax; the live IndexerService loads
+lazily (it materializes chunk arrays through the exec backend's helpers).
+"""
+
+from repro.serving.selection.replay import (ReplaySelector,
+                                            load_selection_trace,
+                                            save_selection_trace,
+                                            selection_trace_payload)
+from repro.serving.selection.types import RequestSelection, token_mask
+
+
+def __getattr__(name: str):
+    if name in ("IndexerService", "SelectionConfig"):
+        from repro.serving.selection import service
+        return getattr(service, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

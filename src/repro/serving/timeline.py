@@ -8,7 +8,7 @@ makes fabric sharing invisible: four flows on one link cost the same as
 one. This module is the event simulator that replaces it:
 
   * every dispatch becomes a Flow — an ordered list of Stages;
-  * a wire stage (probe / transfer / return / pull / gather) occupies the
+  * a wire stage (probe / transfer / return / pull / gather / index) occupies the
     flow's ("link", instance, fabric) resource EXCLUSIVELY: two flows never
     overlap on the same link — queueing is simulated, not priced (§8);
   * a compute stage occupies the holder's ("sm", instance) resource, so
@@ -45,7 +45,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 # ("sm", instance, 0)            — an instance's compute occupancy
 Resource = Tuple[str, int, int]
 
-WIRE_STAGES = frozenset({"probe", "transfer", "return", "pull", "gather"})
+WIRE_STAGES = frozenset({"probe", "transfer", "return", "pull", "gather",
+                         "index"})
 HOLDER_STAGES = frozenset({"compute"})
 # merge / splice / prefill / host (and anything unknown) land requester-side
 

@@ -1,0 +1,140 @@
+"""Property tests for the selection subsystem (ISSUE 4), alongside the
+timeline property suite:
+
+  * residency_split / selection_mask round-trips — the union of per-holder
+    local masks IS the global mask: no index lost or duplicated at shard
+    boundaries (§5.4: the distributed selection covers the chosen set
+    exactly once);
+  * token_mask / block round-trips at NSA granularity, partial tail
+    included;
+  * padded topk_blocks == brute force over per-block maxima (the
+    S % block_tokens bugfix: the tail block competes);
+  * distributed local-top-k + merge == global ranking (the service's
+    top-k merge theorem), for any shard split and truncation budget.
+
+Randomized via hypothesis (dev-only; the module skips without it)."""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import selection as SEL  # noqa: E402
+from repro.serving.selection.types import token_mask  # noqa: E402
+
+
+@st.composite
+def split_indices(draw):
+    """A global index set + shard bounds partitioning [0, S)."""
+    s = draw(st.integers(8, 256))
+    n_sel = draw(st.integers(0, min(s, 32)))
+    idx = draw(st.lists(st.integers(0, s - 1), min_size=n_sel,
+                        max_size=n_sel, unique=True))
+    n_shards = draw(st.integers(1, 5))
+    cuts = draw(st.lists(st.integers(0, s), min_size=n_shards - 1,
+                         max_size=n_shards - 1))
+    bounds = [0] + sorted(cuts) + [s]
+    return sorted(idx), bounds
+
+
+@given(split_indices())
+@settings(max_examples=120, deadline=None)
+def test_residency_split_roundtrip(case):
+    """Union of per-holder local masks == global mask; counts preserved;
+    nothing lost or duplicated at shard boundaries."""
+    idx, bounds = case
+    masks = SEL.residency_split(np.asarray(idx, np.int64), bounds)
+    assert [len(m) for m in masks] == \
+        [bounds[j + 1] - bounds[j] for j in range(len(bounds) - 1)]
+    recon = np.concatenate(masks)
+    want = np.zeros(bounds[-1], bool)
+    if idx:
+        want[np.asarray(idx, np.int64)] = True
+    np.testing.assert_array_equal(recon, want)
+    assert sum(int(m.sum()) for m in masks) == len(idx)
+
+
+@given(split_indices())
+@settings(max_examples=60, deadline=None)
+def test_residency_split_agrees_with_selection_mask(case):
+    """The jax selection_mask over the global indices equals the
+    concatenated residency_split masks."""
+    idx, bounds = case
+    if not idx:
+        return
+    global_mask = np.asarray(
+        SEL.selection_mask(jnp.asarray([idx]), bounds[-1]))[0]
+    masks = SEL.residency_split(np.asarray(idx, np.int64), bounds)
+    np.testing.assert_array_equal(np.concatenate(masks), global_mask)
+
+
+@given(st.integers(1, 300), st.sampled_from([1, 4, 64]),
+       st.data())
+@settings(max_examples=80, deadline=None)
+def test_token_mask_block_roundtrip(length, bt, data):
+    """blocks -> token mask -> blocks recovers exactly (partial tail
+    truncated, never widened)."""
+    n_blocks = -(-length // bt)
+    blocks = data.draw(st.lists(st.integers(0, n_blocks - 1),
+                                max_size=n_blocks, unique=True))
+    mask = token_mask(blocks, bt, length)
+    assert mask.shape == (length,)
+    got = sorted(int(b) for b in np.unique(np.nonzero(mask)[0] // bt))
+    assert got == sorted(blocks)
+
+
+@given(st.integers(5, 200), st.sampled_from([4, 8, 64]), st.integers(1, 6),
+       st.data())
+@settings(max_examples=80, deadline=None)
+def test_padded_topk_blocks_matches_bruteforce(s, bt, k, data):
+    """topk_blocks (jax, padded) picks exactly the blocks with the largest
+    per-block maxima — including a partial tail block (pre-fix, the tail
+    could never win)."""
+    scores = np.asarray(
+        data.draw(st.lists(st.floats(-1e3, 1e3, allow_nan=False,
+                                     width=32),
+                           min_size=s, max_size=s)), np.float32)
+    # unique block maxima so the top-k set is unambiguous
+    bs = SEL.block_scores(scores, bt)
+    if len(np.unique(bs)) != len(bs):
+        return
+    n_blocks = len(bs)
+    kk = min(k, n_blocks)
+    got = sorted(np.asarray(SEL.topk_blocks(jnp.asarray(scores), bt, k)))
+    want = sorted(np.argsort(-bs)[:kk])
+    assert got == [int(b) for b in want]
+    # and the mask agrees on the padded length
+    mask = np.asarray(SEL.block_mask_to_tokens(
+        jnp.asarray([got]), bt, s))[0]
+    assert mask.shape == (s,)
+    assert int(mask.sum()) == sum(min(bt, s - b * bt) for b in got)
+
+
+@given(st.integers(1, 4), st.integers(1, 8), st.data())
+@settings(max_examples=60, deadline=None)
+def test_distributed_topk_merge_equals_global(n_shards, k_blocks, data):
+    """Per-shard truncated top-k + total-order merge == global ranking of
+    every (shard, block) candidate — the IndexerService merge theorem, on
+    arbitrary score tables."""
+    shards = []
+    for pos in range(n_shards):
+        nb = data.draw(st.integers(1, 8))
+        shards.append(np.asarray(
+            data.draw(st.lists(st.floats(-1e3, 1e3, allow_nan=False,
+                                         width=32),
+                               min_size=nb, max_size=nb)), np.float32))
+    # strict total order key: (-score, shard, block) — ties cannot diverge
+    all_cands = sorted((-float(s), pos, b)
+                       for pos, bs in enumerate(shards)
+                       for b, s in enumerate(bs))
+    want = all_cands[:k_blocks]
+    local = []
+    for pos, bs in enumerate(shards):
+        order = np.lexsort((np.arange(len(bs)), -bs))[:k_blocks]
+        local.extend((-float(bs[b]), pos, int(b)) for b in order)
+    got = sorted(local)[:k_blocks]
+    assert got == want

@@ -37,6 +37,23 @@ class TestSelection:
         mask = SEL.block_mask_to_tokens(idx, 4, 16)
         assert np.asarray(mask)[0].sum() == 8
 
+    def test_topk_blocks_partial_tail_selectable(self):
+        """S % block_tokens != 0 (ISSUE 4 bugfix): the score tail pads to
+        the block boundary with -inf instead of being truncated, so the
+        partial last block can win on its real scores — and
+        block_mask_to_tokens agrees on the padded length."""
+        s = np.zeros((1, 20), np.float32)          # blocks of 8, 8, 4
+        s[0, 18] = 9.0                             # peak IN the tail
+        s[0, 2] = 1.0
+        idx = SEL.topk_blocks(jnp.asarray(s), block_tokens=8, k_blocks=2)
+        assert set(np.asarray(idx)[0]) == {2, 0}
+        mask = SEL.block_mask_to_tokens(idx, 8, 20)
+        assert np.asarray(mask).shape == (1, 20)   # truncated, not widened
+        assert np.asarray(mask)[0].sum() == 8 + 4  # full block + real tail
+        # numpy mirror agrees (the serving indexer's host-side path)
+        bs = SEL.block_scores(s[0], 8)
+        assert bs.shape == (3,) and bs[2] == 9.0
+
     def test_indexer_scores_shape(self):
         cfg = SEL.IndexerConfig(d_model=32, d_index=8)
         params, _ = split(SEL.init_indexer(KeyGen(jax.random.PRNGKey(0)),
