@@ -86,6 +86,10 @@ def simulate(n_steps: int = N_STEPS, agents: int = AGENTS,
         "pairs_priced": priced,
         "decisions_per_sec": priced / wall if wall else 0.0,
         "sched_wall_s_total": wall,
+        "sched_wall_us_p50": float(np.percentile(
+            [s.sched_wall_s for s in stats], 50) * 1e6),
+        "sched_wall_us_p99": float(np.percentile(
+            [s.sched_wall_s for s in stats], 99) * 1e6),
         "steady_resident_frac": resident_late,
         "replicas_spawned": sum(s.replicas_spawned for s in stats),
         "evictions": sum(s.evictions for s in stats),
@@ -183,7 +187,10 @@ def run() -> list:
             overlap_efficiency=round(out["overlap_efficiency"], 4),
             makespan_vs_max_reduce=round(out["makespan_vs_max_reduce"], 4)),
         row("serving_steadystate/decisions_per_sec", None, derived,
-            decisions_per_sec=round(out["decisions_per_sec"])),
+            decisions_per_sec=round(out["decisions_per_sec"]),
+            sched_wall_s=round(out["sched_wall_s_total"], 6),
+            sched_wall_us_p50=round(out["sched_wall_us_p50"], 2),
+            sched_wall_us_p99=round(out["sched_wall_us_p99"], 2)),
         row("serving_backend_parity/exec_vs_analytic", None,
             "measured:exec-backend(real arrays) vs analytic planner", **par),
         row("serving_selection/p50_step_latency",
@@ -195,6 +202,85 @@ def run() -> list:
     ]
 
 
+# ---------------------------------------------------------------------------
+# Planner-throughput artifact + CI floor (ISSUE 6 satellite).
+# ---------------------------------------------------------------------------
+
+# PR-4 object-path planner on the same workload (pairs_priced ~11.3k):
+# ~8.6k decisions/sec on the machine the ISSUE quotes, 12.5k on the
+# dev container this refactor was measured on. Kept here so every
+# BENCH_planner.json carries its own baseline context.
+PR4_BASELINE_QUOTED = 8_600
+PR4_BASELINE_DEV_CONTAINER = 12_500
+
+
+def planner_bench(out_path: str = "BENCH_planner.json",
+                  min_decisions_per_sec: float = 0.0,
+                  best_of: int = 3) -> dict:
+    """Run the steady-state sim `best_of` times, write the planner
+    throughput artifact, and enforce an optional decisions/sec floor
+    (the CI smoke — the floor is set WELL below a healthy run so only a
+    real regression to object-path speeds trips it, not runner noise)."""
+    runs = [simulate() for _ in range(best_of)]
+    # run 1 is COLD: every schedule is computed. Later runs of the same
+    # trace hit timeline._SIM_MEMO (transport structures repeating
+    # bit-for-bit reuse their schedule) — the steady-state regime the
+    # memo exists for. Both are reported; neither is hidden in the other.
+    cold = runs[0]
+    best = max(runs, key=lambda r: r["decisions_per_sec"])
+    payload = {
+        "bench": "bench_serving_steadystate.planner_bench",
+        "workload": {"steps": N_STEPS, "agents": AGENTS,
+                     "pairs_priced": best["pairs_priced"]},
+        "decisions_per_sec": round(best["decisions_per_sec"]),
+        "decisions_per_sec_cold": round(cold["decisions_per_sec"]),
+        "decisions_per_sec_runs": [round(r["decisions_per_sec"])
+                                   for r in runs],
+        "sched_wall_s": [round(r["sched_wall_s_total"], 6) for r in runs],
+        "sched_wall_us_p50": round(best["sched_wall_us_p50"], 2),
+        "sched_wall_us_p99": round(best["sched_wall_us_p99"], 2),
+        "baseline_pr4_decisions_per_sec": {
+            "quoted": PR4_BASELINE_QUOTED,
+            "dev_container": PR4_BASELINE_DEV_CONTAINER,
+        },
+        "speedup_vs_quoted": round(
+            best["decisions_per_sec"] / PR4_BASELINE_QUOTED, 2),
+        "speedup_vs_dev_container": round(
+            best["decisions_per_sec"] / PR4_BASELINE_DEV_CONTAINER, 2),
+        "speedup_cold_vs_quoted": round(
+            cold["decisions_per_sec"] / PR4_BASELINE_QUOTED, 2),
+        "speedup_cold_vs_dev_container": round(
+            cold["decisions_per_sec"] / PR4_BASELINE_DEV_CONTAINER, 2),
+    }
+    if out_path:
+        import pathlib
+        pathlib.Path(out_path).write_text(json.dumps(payload, indent=1)
+                                          + "\n")
+    if best["decisions_per_sec"] < min_decisions_per_sec:
+        raise SystemExit(
+            f"planner throughput regression: best-of-{best_of} "
+            f"{best['decisions_per_sec']:.0f} decisions/sec is below the "
+            f"floor {min_decisions_per_sec:.0f} "
+            f"(runs: {payload['decisions_per_sec_runs']})")
+    return payload
+
+
 if __name__ == "__main__":
-    print(json.dumps({"steadystate": simulate(),
-                      "selection_regime": selection_regime()}, indent=1))
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--planner-bench", action="store_true",
+                    help="run only the planner-throughput bench and write "
+                         "the BENCH_planner.json artifact")
+    ap.add_argument("--out", default="BENCH_planner.json",
+                    help="planner artifact path ('' disables the write)")
+    ap.add_argument("--min-decisions-per-sec", type=float, default=0.0,
+                    help="fail (exit 1) below this floor — the CI smoke")
+    ap.add_argument("--best-of", type=int, default=3)
+    a = ap.parse_args()
+    if a.planner_bench:
+        print(json.dumps(planner_bench(a.out, a.min_decisions_per_sec,
+                                       a.best_of), indent=1))
+    else:
+        print(json.dumps({"steadystate": simulate(),
+                          "selection_regime": selection_regime()},
+                         indent=1))

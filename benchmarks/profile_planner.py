@@ -1,0 +1,91 @@
+"""Where the planner's remaining wall time goes (ISSUE 6).
+
+Wraps the plan -> execute critical path of the steady-state bench
+workload with perf_counter probes — no in-source instrumentation, the
+hot path stays clean — and splits one 128-step x 64-agent run into:
+
+  * plan_step        — phase 1-4 of the columnar planner (pair/group
+                       assembly, decide, §8 occupancy, StepPlanArrays);
+  * execute          — the analytic backend (flow build + scheduling);
+  * simulate_arrays  — the heap scheduler inside execute;
+  * flow_arrays      — StepPlanArrays -> FlowArrays columnarization;
+  * accounting       — schedule_step outside plan+execute: record
+                       materialization (StepPlan.records) + StepStats.
+                       NOT part of sched_wall_s / decisions_per_sec.
+
+Run:
+
+    PYTHONPATH=src:. python benchmarks/profile_planner.py [--steps N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import repro.serving.plan as PL
+import repro.serving.timeline as TL
+
+
+def profile(n_steps: int, agents: int, seed: int = 0) -> dict:
+    acc: dict = {}
+
+    def clock(name, fn):
+        def wrapped(*a, **k):
+            t0 = time.perf_counter()
+            r = fn(*a, **k)
+            acc[name] = acc.get(name, 0.0) + time.perf_counter() - t0
+            return r
+        return wrapped
+
+    TL.simulate_arrays = clock("simulate_arrays", TL.simulate_arrays)
+    PL.StepPlanArrays.flow_arrays = clock("flow_arrays",
+                                          PL.StepPlanArrays.flow_arrays)
+
+    # import AFTER patching so the engine binds the wrapped callables
+    from repro.serving.engine import EngineConfig, ServingEngine
+    from repro.serving.workload import (WorkloadConfig, agentic_trace,
+                                        materialize_trace, register_corpus)
+
+    eng = ServingEngine(16, 64 * 2048, cfg=EngineConfig(),
+                        instances_per_pod=8)
+    eng.plan_step = clock("plan_step", eng.plan_step)
+    eng.backend.execute = clock("execute", eng.backend.execute)
+
+    w = WorkloadConfig(n_steps=n_steps, agents=agents, n_corpus_chunks=48,
+                       chunk_tokens=2048, session_steps=(8, 64),
+                       selection_frac=0.1, seed=seed)
+    cids = register_corpus(eng, w)
+    steps = materialize_trace(agentic_trace(w, eng, cids))
+    t0 = time.perf_counter()
+    for reqs in steps:
+        eng.schedule_step(reqs)
+    total = time.perf_counter() - t0
+
+    sched_wall = sum(s.sched_wall_s for s in eng.stats)
+    priced = sum(s.n_priced for s in eng.stats)
+    acc["accounting (outside sched_wall)"] = (
+        total - acc["plan_step"] - acc["execute"])
+    acc["execute: other"] = (acc["execute"] - acc["simulate_arrays"]
+                             - acc.get("flow_arrays", 0.0))
+    return {"total_s": total, "sched_wall_s": sched_wall,
+            "decisions_per_sec": priced / sched_wall if sched_wall else 0.0,
+            "split": acc}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=128)
+    ap.add_argument("--agents", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    out = profile(a.steps, a.agents, a.seed)
+    print(f"total wall      {1000 * out['total_s']:8.1f} ms")
+    print(f"sched wall      {1000 * out['sched_wall_s']:8.1f} ms "
+          f"({out['decisions_per_sec']:,.0f} decisions/sec)")
+    for name, v in sorted(out["split"].items(), key=lambda kv: -kv[1]):
+        print(f"  {name:32s} {1000 * v:8.2f} ms")
+
+
+if __name__ == "__main__":
+    main()

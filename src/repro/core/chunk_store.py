@@ -21,6 +21,23 @@ import dataclasses
 import itertools
 from typing import Any, Dict, List, Optional, Tuple
 
+import numpy as np
+
+from repro.core import constants as C
+
+# pool_tokens is denominated in KV-cache tokens; sidecar arrays (index
+# keys, ISSUE 4) are charged in token-equivalents at the all-layer c^KV
+# byte rate so eviction pressure sees them (ISSUE 6 satellite — they used
+# to ride free)
+KV_TOKEN_BYTES = C.B_KV_TOKEN_LAYER * C.V2_LITE_LAYERS
+
+
+def _sidecar_tokens(array: Any) -> int:
+    nbytes = getattr(array, "nbytes", None)
+    if nbytes is None:
+        return 0
+    return -(-int(nbytes) // KV_TOKEN_BYTES)          # ceil
+
 
 @dataclasses.dataclass
 class Chunk:
@@ -43,6 +60,11 @@ class Chunk:
     # cache bytes; a holder scores its RESIDENT keys, never remote ones
     index_keys: Optional[Any] = None
     replica_index_keys: Dict[int, Any] = dataclasses.field(
+        default_factory=dict)
+    # token-equivalents charged against the owning pool for the sidecars
+    # above (0 while no keys are attached)
+    sidecar_tokens: int = 0
+    replica_sidecar_tokens: Dict[int, int] = dataclasses.field(
         default_factory=dict)
 
 
@@ -69,6 +91,9 @@ class ChunkStore:
         self._forks: Dict[str, Fork] = {}
         self._alloc = [0] * n_instances          # bump allocator per instance
         self._fork_ids = itertools.count()
+        # bumped on every residency mutation (register / replicate / evict /
+        # fail-over / re-home) so readers can cache columnar snapshots
+        self.version = 0
 
     # -- allocation ---------------------------------------------------------
     # _alloc[i] tracks tokens in use on instance i. Offsets handed out are
@@ -108,6 +133,7 @@ class ChunkStore:
                 del self._chunks[chunk_id]        # no half-registered chunk
                 self.free(holder, length)
                 raise
+        self.version += 1
         return c
 
     # -- array payloads (exec mode; ISSUE 3) --------------------------------
@@ -155,6 +181,12 @@ class ChunkStore:
         if n != c.length:
             raise ValueError(
                 f"{chunk_id}: {n} index keys, registered {c.length} tokens")
+        # the sidecar occupies real pool bytes on the holder — charge (and
+        # re-charge on replacement) so eviction pressure sees it
+        tokens = _sidecar_tokens(array)
+        self.free(c.holder, c.sidecar_tokens)
+        self.allocate(c.holder, tokens)
+        c.sidecar_tokens = tokens
         c.index_keys = array
         return c
 
@@ -164,6 +196,10 @@ class ChunkStore:
         with the cache bytes). Same guards as set_replica_data."""
         c = self._chunks[chunk_id]
         if instance in c.replicas:
+            tokens = _sidecar_tokens(array)
+            self.free(instance, c.replica_sidecar_tokens.get(instance, 0))
+            self.allocate(instance, tokens)
+            c.replica_sidecar_tokens[instance] = tokens
             c.replica_index_keys[instance] = array
 
     def index_keys_on(self, chunk_id: str, instance: int) -> Optional[Any]:
@@ -203,6 +239,7 @@ class ChunkStore:
         if instance not in c.replicas and instance != c.holder:
             self.allocate(instance, c.length)
             c.replicas.append(instance)
+            self.version += 1
         return c
 
     def replicas_on(self, instance: int) -> List[str]:
@@ -222,7 +259,10 @@ class ChunkStore:
             c.replicas.remove(instance)
             c.replica_data.pop(instance, None)
             c.replica_index_keys.pop(instance, None)
-            self.free(instance, c.length)
+            # cache bytes AND the index-key sidecar return to the pool
+            self.free(instance,
+                      c.length + c.replica_sidecar_tokens.pop(instance, 0))
+            self.version += 1
 
     def drop_holder(self, instance: int) -> List[str]:
         """Fault handling: instance died. Chunks whose only copy lived there
@@ -235,17 +275,53 @@ class ChunkStore:
                     c.holder = c.replicas.pop(0)
                     # the promoted replica's spliced copy becomes canonical
                     # (the dead instance's array is unreachable) — index
-                    # sidecar promotes with it
+                    # sidecar promotes with it, and its token charge stays
+                    # on the promoted instance as the canonical charge
                     if c.holder in c.replica_data:
                         c.data = c.replica_data.pop(c.holder)
                     if c.holder in c.replica_index_keys:
                         c.index_keys = c.replica_index_keys.pop(c.holder)
+                    c.sidecar_tokens = c.replica_sidecar_tokens.pop(
+                        c.holder, 0)
                 else:
                     orphaned.append(c.chunk_id)
         for f in self._forks.values():
             if f.suffix_holder == instance:
                 orphaned.append(f.fork_id)
+        self.version += 1
         return orphaned
+
+    def rehome(self, chunk_id: str, instance: int) -> bool:
+        """Move the canonical copy of an orphaned chunk to `instance` if it
+        has pool room (the engine's LOCAL re-prefill path). Returns False
+        when the pool cannot take it."""
+        c = self._chunks[chunk_id]
+        if self.capacity_left(instance) < c.length:
+            return False
+        self.allocate(instance, c.length)
+        c.holder = instance
+        self.version += 1
+        return True
+
+    # -- columnar residency snapshot (ISSUE 6 array planner) ----------------
+
+    def residency_columns(self):
+        """One columnar pass over the residency map: chunk ids in insertion
+        order, their lengths, and a (n_chunks, 1 + max_replicas) holder
+        matrix in [canonical] + replicas order, -1 padded. Consumers key
+        their caches on `version`."""
+        ids = tuple(self._chunks)
+        chunks = [self._chunks[cid] for cid in ids]
+        n = len(ids)
+        width = 1 + max((len(c.replicas) for c in chunks), default=0)
+        holders = np.full((n, width), -1, dtype=np.int64)
+        length = np.zeros(n, dtype=np.int64)
+        for i, c in enumerate(chunks):
+            holders[i, 0] = c.holder
+            if c.replicas:
+                holders[i, 1:1 + len(c.replicas)] = c.replicas
+            length[i] = c.length
+        return ids, length, holders, chunks
 
     # -- agentic CoW forks (§1, §6.3) ---------------------------------------
 

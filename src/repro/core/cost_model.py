@@ -474,6 +474,139 @@ def fetch_selected_stages(fabric: Fabric, k_local: float, m_q: int,
         ("gather", t_fetch_scattered(fabric, k_local, 1, payload)),)
 
 
+# ---------------------------------------------------------------------------
+# Stage templates (ISSUE 6): the per-stage breakdowns above, assembled by
+# broadcast for a whole dispatch column instead of per-dispatch function
+# calls. One StageTemplates instance caches the per-(fabric, regime)
+# coefficient columns of a FabricArrays + Payload pairing; each method
+# returns an (R, n_stages) float64 duration matrix whose rows are
+# element-wise bit-identical to the scalar *_stages tuples (the arithmetic
+# mirrors the scalar expressions operation-for-operation — the array
+# planner's golden parity depends on it). Stage names per kind are the
+# class-level *_names tuples, in column order.
+# ---------------------------------------------------------------------------
+
+
+class StageTemplates:
+    """Broadcast assembly of the §4 stage breakdowns for the array planner.
+
+    Durations are UNCONTENDED (k_flows = 0), like the timeline inputs the
+    engine builds — §8 queueing is simulated by the scheduler, while the
+    *_est methods price the congested closed forms the predicate used."""
+
+    route_names = ("probe", "transfer", "compute", "return", "merge")
+    fetch_names = ("pull", "splice")
+    local_names = ("prefill",)
+    route_selected_names = ("index",) + route_names
+    fetch_selected_names = ("index", "gather")
+
+    def __init__(self, fa: FabricArrays, payload: Payload = MLA_PAYLOAD,
+                 t_compute: float = np.mean(C.HOLDER_COMPUTE_DECODE_S),
+                 t_merge: float = C.MERGE_COST_S):
+        self.fa = fa
+        self.payload = payload
+        self.t_compute = t_compute
+        self.t_merge = t_merge
+
+    # -- dense ROUTE --------------------------------------------------------
+
+    def route(self, fi: np.ndarray, m_q: np.ndarray) -> np.ndarray:
+        fa, p = self.fa, self.payload
+        mq = np.asarray(m_q, np.float64)
+        bw = fa.bw_Bps[fi]
+        out = np.empty((mq.shape[0], 5), np.float64)
+        out[:, 0] = fa.t_probe_s[fi]             # probe_mult == 1 at k = 0
+        out[:, 1] = mq * p.q_bytes / bw
+        out[:, 2] = self.t_compute
+        out[:, 3] = mq * p.p_bytes / bw
+        out[:, 4] = self.t_merge
+        return out
+
+    def route_est(self, fi: np.ndarray, m_q: np.ndarray,
+                  k_flows: np.ndarray) -> np.ndarray:
+        """t_route_congested_full, the formula the predicate priced with."""
+        return t_route_congested_full_batch(
+            self.fa, fi, m_q, k_flows, self.payload,
+            self.t_compute, self.t_merge)
+
+    # -- dense FETCH --------------------------------------------------------
+
+    def fetch(self, fi: np.ndarray, c_t: np.ndarray,
+              reuse: np.ndarray) -> np.ndarray:
+        fa, p = self.fa, self.payload
+        ct = np.asarray(c_t, np.float64)
+        r = np.asarray(reuse, np.float64)
+        out = np.empty((ct.shape[0], 2), np.float64)
+        out[:, 0] = ct * p.b_kv_token_all_layers / fa.link_peak_Bps[fi] / r
+        out[:, 1] = (C.SPLICE_BASE_S + C.SPLICE_PER_TOKEN_S * ct) / r
+        return out
+
+    def fetch_est(self, fi: np.ndarray, c_t: np.ndarray,
+                  reuse: np.ndarray) -> np.ndarray:
+        fa, p = self.fa, self.payload
+        ct = np.asarray(c_t, np.float64)
+        pull = ct * p.b_kv_token_all_layers / fa.link_peak_Bps[fi]
+        splice = C.SPLICE_BASE_S + C.SPLICE_PER_TOKEN_S * ct
+        return (pull + splice) / np.asarray(reuse, np.float64)
+
+    # -- LOCAL --------------------------------------------------------------
+
+    def local(self, c_t: np.ndarray) -> np.ndarray:
+        return t_local_batch(c_t, self.payload.n_layers)[:, None]
+
+    def local_est(self, c_t: np.ndarray) -> np.ndarray:
+        return t_local_batch(c_t, self.payload.n_layers)
+
+    # -- selection regime (§5.4) --------------------------------------------
+
+    def _index_rt(self, fi: np.ndarray, m_q: np.ndarray, k_blocks: np.ndarray,
+                  d_index: int) -> np.ndarray:
+        wire_bytes = (np.asarray(m_q, np.int64) * d_index * C.BF16
+                      + np.asarray(k_blocks, np.int64)
+                      * INDEX_CANDIDATE_BYTES)
+        return self.fa.t_probe_s[fi] + wire_bytes / self.fa.bw_Bps[fi]
+
+    def route_selected(self, fi: np.ndarray, m_q: np.ndarray,
+                       sel_frac: np.ndarray, k_blocks: np.ndarray,
+                       d_index: int) -> np.ndarray:
+        out = np.empty((np.asarray(m_q).shape[0], 6), np.float64)
+        out[:, 0] = self._index_rt(fi, m_q, k_blocks, d_index)
+        out[:, 1:] = self.route(fi, m_q)
+        out[:, 3] = self.t_compute * np.asarray(sel_frac, np.float64)
+        return out
+
+    def route_selected_est(self, fi: np.ndarray, m_q: np.ndarray,
+                           k_flows: np.ndarray, sel_frac: np.ndarray,
+                           k_blocks: np.ndarray, d_index: int) -> np.ndarray:
+        cong = t_route_congested_batch(self.fa, fi, m_q, k_flows,
+                                       self.payload)
+        return (self._index_rt(fi, m_q, k_blocks, d_index) + cong
+                + self.t_compute * np.asarray(sel_frac, np.float64)
+                + self.t_merge)
+
+    def fetch_selected(self, fi: np.ndarray, k_local: np.ndarray,
+                       m_q: np.ndarray, k_blocks: np.ndarray,
+                       d_index: int) -> np.ndarray:
+        out = np.empty((np.asarray(m_q).shape[0], 2), np.float64)
+        out[:, 0] = self._index_rt(fi, m_q, k_blocks, d_index)
+        out[:, 1] = self._gather(fi, k_local)
+        return out
+
+    def fetch_selected_est(self, fi: np.ndarray, k_local: np.ndarray,
+                           m_q: np.ndarray, k_blocks: np.ndarray,
+                           d_index: int) -> np.ndarray:
+        return self._index_rt(fi, m_q, k_blocks, d_index) \
+            + self._gather(fi, k_local)
+
+    def _gather(self, fi: np.ndarray, k_local: np.ndarray,
+                per_holder_handshake_s: float = 180e-6) -> np.ndarray:
+        """t_fetch_scattered at n_holders = 1 (per-holder gather)."""
+        p = self.payload
+        per_layer_bytes = np.asarray(k_local, np.int64) * p.b_kv_token_layer
+        return p.n_layers * (per_holder_handshake_s
+                             + per_layer_bytes / self.fa.bw_Bps[fi])
+
+
 def scale_stages(stages: StageList, factor: float) -> StageList:
     """Scale every stage duration (holder/requester slowdown)."""
     if factor == 1.0:

@@ -152,6 +152,19 @@ class RequestBatch:
     def __len__(self) -> int:
         return int(np.asarray(self.m_q).shape[0])
 
+    def take(self, idx: np.ndarray) -> "RequestBatch":
+        """Row subset sharing the fabric table — the engine's incremental
+        §8 repricing re-runs the predicate only on pairs whose link crossed
+        the congestion knee (ISSUE 6)."""
+        return RequestBatch(
+            fabrics=self.fabrics, m_q=self.m_q[idx], c_t=self.c_t[idx],
+            fabric_idx=self.fabric_idx[idx],
+            expected_reuse_steps=self.expected_reuse_steps[idx],
+            k_selected=self.k_selected[idx], n_holders=self.n_holders[idx],
+            position_delta=self.position_delta[idx],
+            holder_can_compute=self.holder_can_compute[idx],
+            host_overhead=self.host_overhead[idx], payload=self.payload)
+
     @classmethod
     def from_requests(cls, reqs: "list[Request]") -> "RequestBatch":
         """Pack scalar Requests; fabrics are interned by object identity so
@@ -207,34 +220,76 @@ def route_cost_batch(b: RequestBatch,
     on the element's link), prices under §8 congestion instead of the
     uncontended transport — the engine's steady-state path."""
     fa = b.fabrics
-    has_sel = b.k_selected >= 0
-    fanout = has_sel & (b.n_holders > 1)
-    t_host = np.where(
-        b.host_overhead,
-        C.HOST_OVERHEAD_BASE_S + C.HOST_OVERHEAD_PER_ROW_S * b.m_q, 0.0)
     if k_flows is None:
-        plain = cm.t_route_batch(fa, b.fabric_idx, b.m_q, b.payload)
+        t = cm.t_route_batch(fa, b.fabric_idx, b.m_q, b.payload)
     else:
-        plain = cm.t_route_congested_full_batch(fa, b.fabric_idx, b.m_q,
-                                                k_flows, b.payload)
-    fan = cm.t_route_fanout_batch(fa, b.fabric_idx, b.m_q,
-                                  np.maximum(b.n_holders, 1), b.payload)
-    t = np.where(fanout, fan, plain) + t_host
-    return np.where(b.holder_can_compute, t, np.inf)
+        t = cm.t_route_congested_full_batch(fa, b.fabric_idx, b.m_q,
+                                            k_flows, b.payload)
+    # selection fan-out / host overhead / dead-holder rows are priced on
+    # their row subsets only (all three terms are element-wise, so the
+    # scattered values are bitwise what the full-width pass produced)
+    fanout = (b.k_selected >= 0) & (b.n_holders > 1)
+    if fanout.any():
+        idx = np.nonzero(fanout)[0]
+        fan = cm.t_route_fanout_batch(fa, b.fabric_idx[idx], b.m_q[idx],
+                                      np.maximum(b.n_holders[idx], 1),
+                                      b.payload)
+        t = t.copy()
+        t[idx] = fan
+    if b.host_overhead.any():
+        t = t + np.where(
+            b.host_overhead,
+            C.HOST_OVERHEAD_BASE_S + C.HOST_OVERHEAD_PER_ROW_S * b.m_q, 0.0)
+    if not b.holder_can_compute.all():
+        t = np.where(b.holder_can_compute, t, np.inf)
+    return t
+
+
+def route_cost_rows(b: RequestBatch, idx: np.ndarray,
+                    k_flows: np.ndarray) -> np.ndarray:
+    """route_cost_batch on a row subset: bitwise what
+    route_cost_batch(b.take(idx), k_flows) computes, without materialising
+    the sub-batch. The engine's §8 incremental repricing only needs the
+    ROUTE term on the over-knee rows — fetch/local costs are congestion-
+    independent, so the uncontended pass already has them exactly."""
+    fa = b.fabrics
+    fi = b.fabric_idx[idx]
+    mq = b.m_q[idx]
+    t = cm.t_route_congested_full_batch(fa, fi, mq, k_flows, b.payload)
+    ks = b.k_selected[idx]
+    nh = b.n_holders[idx]
+    fanout = (ks >= 0) & (nh > 1)
+    if fanout.any():
+        j = np.nonzero(fanout)[0]
+        t[j] = cm.t_route_fanout_batch(fa, fi[j], mq[j],
+                                       np.maximum(nh[j], 1), b.payload)
+    ho = b.host_overhead[idx]
+    if ho.any():
+        t = t + np.where(
+            ho, C.HOST_OVERHEAD_BASE_S + C.HOST_OVERHEAD_PER_ROW_S * mq, 0.0)
+    hcc = b.holder_can_compute[idx]
+    if not hcc.all():
+        t = np.where(hcc, t, np.inf)
+    return t
 
 
 def fetch_cost_batch(b: RequestBatch) -> np.ndarray:
     """Vectorized fetch_cost(): scattered gather under selection (never
     amortised, §5.4); otherwise pull+splice amortised over expected reuse."""
     fa = b.fabrics
-    has_sel = b.k_selected >= 0
-    scattered = cm.t_fetch_scattered_batch(
-        fa, b.fabric_idx, np.maximum(b.k_selected, 0),
-        np.maximum(b.n_holders, 1), b.payload)
     contiguous = b.position_delta != 0
     bulk = cm.t_fetch_batch(fa, b.fabric_idx, b.c_t, b.payload, contiguous)
     bulk = bulk / np.maximum(1, b.expected_reuse_steps)
-    return np.where(has_sel, scattered, bulk)
+    has_sel = b.k_selected >= 0
+    if not has_sel.any():
+        return bulk
+    # scattered-gather pricing on the selection rows only (element-wise,
+    # so the scatter reproduces the full-width np.where bitwise)
+    idx = np.nonzero(has_sel)[0]
+    bulk[idx] = cm.t_fetch_scattered_batch(
+        fa, b.fabric_idx[idx], np.maximum(b.k_selected[idx], 0),
+        np.maximum(b.n_holders[idx], 1), b.payload)
+    return bulk
 
 
 def local_cost_batch(b: RequestBatch,

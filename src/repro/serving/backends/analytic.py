@@ -5,12 +5,19 @@ overlap-aware transport timeline (wire stages serialize per (link, fabric),
 holder compute per-instance). No arrays move; StepStats derived from this
 backend are bit-identical to the pre-split engine — the golden JSON
 fixtures of tests/test_engine_golden.py enforce that.
+
+Since ISSUE 6 a plan carrying its columnar form (StepPlan.arrays, the
+array planner's output) is scheduled by timeline.simulate_arrays — the
+lazy-heap event scheduler — instead of the per-stage O(stages x flows)
+rescan loop. The two produce the same schedule stage-for-stage, so the
+golden fixtures hold bit-identically on either path.
 """
 
 from __future__ import annotations
 
 from typing import TYPE_CHECKING
 
+from repro.serving import timeline as TL
 from repro.serving.backends.base import StepExecution
 from repro.serving.plan import StepPlan, build_timeline
 
@@ -23,5 +30,8 @@ class AnalyticBackend:
 
     def execute(self, engine: "ServingEngine",
                 plan: StepPlan) -> StepExecution:
-        return StepExecution(timeline=build_timeline(plan.records),
-                             backend=self.name)
+        if plan.arrays is not None:
+            timeline = TL.simulate_arrays(plan.arrays.flow_arrays())
+        else:
+            timeline = build_timeline(plan.records)
+        return StepExecution(timeline=timeline, backend=self.name)

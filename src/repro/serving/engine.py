@@ -52,8 +52,23 @@ from repro.serving.backends.base import ExecutionBackend, StepExecution
 # Plan-layer types live in repro.serving.plan; re-exported here so the
 # historical `from repro.serving.engine import ...` imports keep working.
 from repro.serving.plan import (DispatchRecord, Request, ResidentPair,
-                                StepPlan, StepStats, _critical_path,
-                                build_timeline, transport_latencies)
+                                StepPlan, StepPlanArrays, StepStats,
+                                _critical_path, build_timeline,
+                                transport_latencies)
+
+# static stage-code rows for the template-priced dispatch kinds (ISSUE 6)
+_ROUTE_CODES = np.array([TL.STAGE_CODE[n]
+                         for n in cm.StageTemplates.route_names], np.int64)
+_FETCH_CODES = np.array([TL.STAGE_CODE[n]
+                         for n in cm.StageTemplates.fetch_names], np.int64)
+_LOCAL_CODES = np.array([TL.STAGE_CODE[n]
+                         for n in cm.StageTemplates.local_names], np.int64)
+_SELR_CODES = np.array([TL.STAGE_CODE[n]
+                        for n in cm.StageTemplates.route_selected_names],
+                       np.int64)
+_SELF_CODES = np.array([TL.STAGE_CODE[n]
+                        for n in cm.StageTemplates.fetch_selected_names],
+                       np.int64)
 
 __all__ = [
     "DispatchRecord", "EngineConfig", "Instance", "Request", "ResidentPair",
@@ -81,6 +96,11 @@ class EngineConfig:
     payload: cm.Payload = cm.MLA_PAYLOAD
     congestion_aware: bool = True                  # §8 link-subscription pricing
     persist_fetches: bool = True                   # fetched chunks stay resident
+    # ISSUE 6: plan through the columnar array path (StepPlanArrays +
+    # timeline.simulate_arrays). False forces the object oracle — the two
+    # are bit-identical (tests/test_plan_arrays.py), so this is a kill
+    # switch and an A/B handle, not a behavior choice.
+    vectorized_plan: bool = True
     # exec mode: steps of decode-output history to retain (outputs hold
     # real arrays; keeping every step would grow memory linearly over a
     # run). < 0 keeps everything.
@@ -132,6 +152,19 @@ class ServingEngine:
         # idx 1 = cross-pod
         self._fa = cm.FabricArrays.from_fabrics(
             [C.fabric(cfg.intra_pod_fabric), C.fabric(cfg.cross_pod_fabric)])
+        # broadcast-assembled §4 stage templates + the store's columnar
+        # residency snapshot, cached on ChunkStore.version (ISSUE 6)
+        self._templates = cm.StageTemplates(self._fa, cfg.payload)
+        self._mirror: Optional[dict] = None
+        self._ntab: Optional[dict] = None
+        # phase-1 cross-step cache (ISSUE 6): resolved pairs + grouping,
+        # keyed on the residency epoch and the request-set signature
+        self._p1: Optional[dict] = None
+        # §5 decision memo: pricing-column combo -> costs + per-reuse codes,
+        # and the §8 congested-route cost per (m_q, fabric, k_flows) point.
+        # Both are pure functions of the cost model, never invalidated.
+        self._dec_memo: Dict[tuple, list] = {}
+        self._cong_memo: Dict[tuple, float] = {}
 
     # -- topology -------------------------------------------------------------
 
@@ -186,20 +219,30 @@ class ServingEngine:
         predicate, per-(holder, chunk, fabric) dispatch batching, link
         congestion pricing, fan-in capping, replica persistence. Planning
         COMMITS residency state (persisted fetches, replica spawns, LRU
-        evictions); execution replays the plan without re-deciding."""
+        evictions); execution replays the plan without re-deciding.
+
+        Since ISSUE 6 the hot path is `_plan_step_arrays` (columnar
+        residency resolution + template-priced dispatch assembly); the
+        original object planner survives verbatim as `_plan_step_objects`,
+        the oracle the array path is pinned bit-identical to, and the
+        fallback for the rare step shapes the array path does not carry
+        (orphaned chunks on a dead holder)."""
         self.step_idx += 1
         self._evictions_this_step = 0
-        replicas_spawned = 0
-        records: List[DispatchRecord] = []
-        resident_pairs: List[ResidentPair] = []
-        pairs: List[_Pair] = []
-        n_resident = 0
-        n_pairs = 0
+        selections, selection_fallbacks = self._plan_selections(requests)
+        if self.cfg.vectorized_plan:
+            plan = self._plan_step_arrays(requests, selections,
+                                          selection_fallbacks)
+            if plan is not None:
+                return plan
+        return self._plan_step_objects(requests, selections,
+                                       selection_fallbacks)
 
-        # -- phase 0: the indexer's selections (§5.4, ISSUE 4) --------------
-        # score -> select happens BEFORE residency resolution: the masks are
-        # a per-request property (the global top-k over the request's
-        # chunks), independent of which holder ends up serving each shard.
+    def _plan_selections(self, requests: List[Request]):
+        """Phase 0: the indexer's selections (§5.4, ISSUE 4). Score ->
+        select happens BEFORE residency resolution: the masks are a
+        per-request property (the global top-k over the request's chunks),
+        independent of which holder ends up serving each shard."""
         selections: Dict[int, object] = {}
         selection_fallbacks = 0
         sel_reqs = [rq for rq in requests if rq.k_selected is not None]
@@ -210,6 +253,19 @@ class ServingEngine:
             else:
                 selection_fallbacks = len(sel_reqs)
                 self._warn_selection_fallback()
+        return selections, selection_fallbacks
+
+    def _plan_step_objects(self, requests: List[Request],
+                           selections: Dict[int, object],
+                           selection_fallbacks: int) -> StepPlan:
+        """The original per-request object planner — the exactness oracle
+        for `_plan_step_arrays` and the fallback for orphaned-chunk steps."""
+        replicas_spawned = 0
+        records: List[DispatchRecord] = []
+        resident_pairs: List[ResidentPair] = []
+        pairs: List[_Pair] = []
+        n_resident = 0
+        n_pairs = 0
         # distinct instances a request's selection spans — the M of the
         # §5.4 fan-out/gather the predicate prices (resident shards count
         # their home)
@@ -237,9 +293,7 @@ class ServingEngine:
                             cm.local_stages(chunk.length,
                                             self.cfg.payload.n_layers), sd),
                         req_ids=(rq.req_id,)))
-                    if self.store.capacity_left(rq.home) >= chunk.length:
-                        self.store.allocate(rq.home, chunk.length)
-                        chunk.holder = rq.home
+                    self.store.rehome(cid, rq.home)
                     if selected:
                         span[rq.req_id].add(rq.home)
                     continue
@@ -495,6 +549,812 @@ class ServingEngine:
             selections=selections,
             selection_fallbacks=selection_fallbacks)
 
+    # -- the ISSUE 6 columnar planner ----------------------------------------
+
+    def _residency_mirror(self) -> dict:
+        """Columnar snapshot of the chunk store (ids in insertion order,
+        lengths, [canonical] + replicas holder matrix), cached on
+        ChunkStore.version so steady-state steps pay zero rebuild cost."""
+        v = self.store.version
+        mir = self._mirror
+        if mir is None or mir["version"] != v:
+            ids, length, holders, chunks = self.store.residency_columns()
+            # rank[i] = position of ids[i] in sorted-by-chunk-id order, so
+            # integer (holder, rank) sort keys reproduce the object
+            # planner's (holder, chunk_id) string order exactly (ids are
+            # unique, making rank a total order consistent with the string
+            # order)
+            rank = [0] * len(ids)
+            for r, i in enumerate(sorted(range(len(ids)),
+                                         key=ids.__getitem__)):
+                rank[i] = r
+            mir = {"version": v, "ids": ids, "length": length,
+                   "length_l": length.tolist(), "rank": rank,
+                   "holders": holders, "chunks": chunks,
+                   "index": {cid: i for i, cid in enumerate(ids)}}
+            self._mirror = mir
+        return mir
+
+    def _nearest_table(self, mir: dict) -> dict:
+        """Per-(chunk, home) nearest-live-holder table, cached on the
+        (store version, instance aliveness) epoch. One vectorized argmin
+        over (chunk, home, holder-slot) replaces per-step per-pair probe
+        pricing: resolving a pair becomes two nested-list lookups. The
+        tie-break is argmin's first minimum over the [canonical] +
+        replicas columns — exactly the object planner's min(). Entries
+        for orphaned chunks (live == 0) are garbage; callers must check
+        `live` first (the planner falls back to the object path)."""
+        av = tuple(i.alive for i in self.instances)
+        nt = self._ntab
+        if (nt is not None and nt["version"] == mir["version"]
+                and nt["alive"] == av):
+            return nt
+        Hm = mir["holders"]                          # (nc, W)
+        nc = Hm.shape[0]
+        if nc == 0:
+            nt = {"version": mir["version"], "alive": av, "Hm": Hm,
+                  "holder": [], "live": [], "fi": [], "changed": None}
+            self._ntab = nt
+            return nt
+        # incremental rebuild: a version bump from a replica spawn /
+        # persist / eviction touches a handful of chunks — when aliveness
+        # and matrix shape are unchanged, recompute only the rows whose
+        # holder sets differ and patch them in place. `changed` carries the
+        # dirty chunk rows to the planner's epoch-delta splice (None means
+        # everything may have moved).
+        if (nt is not None and nt["alive"] == av and "Hm" in nt
+                and nt["Hm"].shape == Hm.shape):
+            rows = np.nonzero((nt["Hm"] != Hm).any(axis=1))[0]
+            if rows.shape[0] <= (nc >> 2):
+                sub = self._ntab_rows(Hm, av, rows)
+                holder_l, live_l, fi_l_ = nt["holder"], nt["live"], nt["fi"]
+                hs, ls, fs = (sub["holder"].tolist(), sub["live"].tolist(),
+                              sub["fi"].tolist())
+                for x, ci in enumerate(rows.tolist()):
+                    holder_l[ci] = hs[x]
+                    live_l[ci] = ls[x]
+                    fi_l_[ci] = fs[x]
+                nt["prev"] = nt["version"]
+                nt["version"] = mir["version"]
+                nt["Hm"] = Hm
+                nt["changed"] = set(rows.tolist())
+                return nt
+        sub = self._ntab_rows(Hm, av, None)
+        nt = {"version": mir["version"], "alive": av, "Hm": Hm,
+              "holder": sub["holder"].tolist(), "live": sub["live"].tolist(),
+              "fi": sub["fi"].tolist(), "changed": None}
+        self._ntab = nt
+        return nt
+
+    def _ntab_rows(self, Hm: np.ndarray, av: tuple,
+                   rows: Optional[np.ndarray]) -> dict:
+        """The nearest-table argmin for a row subset (all rows when None)."""
+        if rows is not None:
+            Hm = Hm[rows]
+        nc = Hm.shape[0]
+        n_inst = len(self.instances)
+        pod = np.fromiter((i.pod for i in self.instances), np.int64, n_inst)
+        alive = np.asarray(av, bool)
+        Hc = np.clip(Hm, 0, None)
+        alive_m = (Hm >= 0) & alive[Hc]              # (nc, W)
+        live = alive_m.sum(axis=1)
+        inst = np.arange(n_inst)
+        probe = np.where(pod[Hc][:, None, :] == pod[None, :, None],
+                         self._fa.t_probe_s[0], self._fa.t_probe_s[1])
+        keyc = np.where(Hm[:, None, :] == inst[None, :, None], 0.0, probe)
+        keyc = np.where(alive_m[:, None, :], keyc, np.inf)
+        am = np.argmin(keyc, axis=2)                 # (nc, n_inst)
+        holder_tab = Hm[np.arange(nc)[:, None], am]
+        fi_tab = (pod[np.clip(holder_tab, 0, None)]
+                  != pod[None, :]).astype(np.int64)
+        return {"holder": holder_tab, "live": live, "fi": fi_tab}
+
+    def _pair_entry(self, mq: int, ct: int, fi: int, ksel: int,
+                    nh: int) -> list:
+        """Decision-memo entry for one pricing-column combo: the §5 costs
+        that do not depend on the reuse countdown, evaluated once through
+        the SAME cost-model batch functions the full-width predicate uses
+        (1-element arrays — pure element-wise math, so each lane is bitwise
+        what a wide pass produces). Layout: [t_route, t_local, fetch_core,
+        is_selection, {reuse -> (code, t_fetch)}] where fetch_core is the
+        scattered-gather cost under selection (reuse-independent, §5.4) or
+        the UN-amortised bulk pull otherwise."""
+        memo = self._dec_memo
+        key = (mq, ct, fi, ksel, nh)
+        ent = memo.get(key)
+        if ent is None:
+            fa = self._fa
+            pay = self.cfg.payload
+            fi_a = np.array([fi], np.int64)
+            mq_a = np.array([mq], np.int64)
+            if ksel >= 0 and nh > 1:
+                tr = cm.t_route_fanout_batch(
+                    fa, fi_a, mq_a, np.array([max(nh, 1)], np.int64), pay)
+            else:
+                tr = cm.t_route_batch(fa, fi_a, mq_a, pay)
+            tl = cm.t_local_batch(np.array([ct], np.int64), pay.n_layers,
+                                  C.PREFILL_PER_TOKEN_LAYER_MID_S)
+            if ksel >= 0:
+                aux = cm.t_fetch_scattered_batch(
+                    fa, fi_a, np.array([max(ksel, 0)], np.int64),
+                    np.array([max(nh, 1)], np.int64), pay)
+            else:
+                aux = cm.t_fetch_batch(fa, fi_a, np.array([ct], np.int64),
+                                       pay, np.array([True]))
+            ent = memo[key] = [float(tr[0]), float(tl[0]), float(aux[0]),
+                               ksel >= 0, {}]
+        return ent
+
+    def _plan_step_arrays(self, requests: List[Request],
+                          selections: Dict[int, object],
+                          selection_fallbacks: int) -> Optional[StepPlan]:
+        """Columnar plan_step (ISSUE 6): one vectorized residency pass over
+        all (request, chunk) pairs, one decide_batch (plus an incremental
+        §8 repricing of only the pairs whose link crossed the congestion
+        knee), and template-priced dispatch assembly straight into
+        StepPlanArrays columns. The Python control pass that remains runs
+        per GROUP (fan-in budget, persistence, backups — a handful per
+        step), never per pair. Returns None when the step needs the object
+        fallback: a chunk with no live holder (mid-step re-homing)."""
+        step = self.step_idx
+        cfg = self.cfg
+        mir = self._residency_mirror()
+        ids: Tuple[str, ...] = mir["ids"]
+        idx_of = mir["index"]
+        chunks = mir["chunks"]
+        length_l = mir["length_l"]
+        slowdown = [i.slowdown for i in self.instances]
+        ntab = self._nearest_table(mir)
+        holder_tab = ntab["holder"]
+        live_tab = ntab["live"]
+        fi_tab = ntab["fi"]
+
+        # -- phase 1: residency resolution, one Python pass over pairs ------
+        # (per-pair work is two table lookups; pair order == the object
+        # planner's, so column order and group insertion order match it)
+        #
+        # Cross-step cache, two layers keyed on the (store version,
+        # aliveness) residency epoch. A request's resolution — which pairs
+        # are resident, each priced pair's holder / fabric / group key —
+        # depends only on the epoch and the request's own fields MINUS the
+        # reuse countdown, so it is cached per request and spliced into the
+        # step columns; when the whole request SET repeats (no session
+        # rolled over), the assembled columns themselves are reused and the
+        # splice is skipped too. Reuse, the one per-step-varying column, is
+        # rebuilt from the live requests either way.
+        epoch = (mir["version"], ntab["alive"])
+        p1 = self._p1
+        force_k0 = -1      # first residency-dirty request under epoch delta
+        if p1 is not None and p1["epoch"] != epoch:
+            # Epoch delta: when the nearest table knows exactly which chunk
+            # rows moved since the version this cache was built against
+            # (and aliveness held), only cache entries touching those
+            # chunks are stale — prune them and force the step splice to
+            # restart at the first dirty request instead of discarding
+            # everything.
+            ch = (ntab["changed"]
+                  if (ntab.get("prev"), ntab["alive"]) == p1["epoch"]
+                  else None)
+            if ch is None:
+                p1 = None
+            else:
+                rc = p1["req"]
+                for rk in [rk for rk, ent in rc.items()
+                           if any(idx_of[c] in ch for c in ent[-1])]:
+                    del rc[rk]
+                stp = p1["step"]
+                if stp is not None:
+                    sg = stp["sig"]
+                    force_k0 = len(sg)
+                    for k in range(len(sg)):
+                        if any(idx_of[c] in ch for c in sg[k][5]):
+                            force_k0 = k
+                            break
+                p1["epoch"] = epoch
+        if p1 is None:
+            p1 = self._p1 = {"epoch": epoch, "req": {}, "step": None}
+        rcache: Dict[tuple, tuple] = p1["req"]
+        st = p1["step"]
+        nreq = len(requests)
+        k0 = -1                        # first request needing a (re)splice
+        if st is not None and len(st["sig"]) == nreq:
+            sig = st["sig"]
+            k0 = nreq
+            for k, rq in enumerate(requests):
+                s = sig[k]
+                if (s[0] != rq.req_id or s[1] != rq.home
+                        or s[2] != rq.m_q or s[3] != rq.k_selected
+                        or s[4] != (rq.req_id in selections)
+                        or s[5] != rq.chunk_ids):
+                    k0 = k
+                    break
+            if 0 <= force_k0 < k0:
+                k0 = force_k0
+        full_hit = k0 == nreq
+        if full_hit:                                 # whole step repeated
+            for c in st["touch"]:            # replica-LRU touch, idempotent
+                c.last_access = step
+            resident_pairs = st["resident"]
+            n_pairs = st["n_pairs"]
+            pair_req = st["pair_req"]
+            (mq_l, ct_l, fi_l, ksel_l, nh_l, home_l, rid_l, hold_l,
+             groups, pkey_l, dec_l) = st["cols"]
+        else:
+            if k0 < 0:                               # no reusable prefix
+                k0 = 0
+                # cols: mq, ct, fi, ksel, nh, home, rid, hold, then the
+                # (holder, chunk idx, fabric idx, selection req) ->
+                # priced-pair-rows dict in first-occurrence order (the
+                # object planner's group key), pair -> group key, and
+                # pair -> decision-memo entry
+                st = p1["step"] = {
+                    "sig": [], "touch": [], "pair_req": [], "resident": [],
+                    "n_pairs": 0,
+                    # per-request cumulative offsets into pairs / priced
+                    # pairs / residents / touches — the delta-splice cut
+                    # points
+                    "np_off": [0], "p_off": [0], "r_off": [0], "t_off": [0],
+                    "cols": ([], [], [], [], [], [], [], [], {}, [], [])}
+            sig = st["sig"]
+            touch = st["touch"]
+            pair_req = st["pair_req"]
+            resident_pairs = st["resident"]
+            np_off = st["np_off"]
+            p_off = st["p_off"]
+            r_off = st["r_off"]
+            t_off = st["t_off"]
+            (mq_l, ct_l, fi_l, ksel_l, nh_l, home_l, rid_l, hold_l,
+             groups, pkey_l, dec_l) = st["cols"]
+            # Delta splice: requests before k0 verified unchanged, so their
+            # column rows are already right — truncate everything past
+            # their boundary and replay only the suffix. Group member
+            # lists hold pair rows in ascending order, so each suffix pair
+            # sits at its group's tail; popping in reverse pair order and
+            # deleting emptied groups restores exactly the dict state
+            # (insertion order included) a prefix-only build would have
+            # produced, and the replay then re-inserts suffix-first groups
+            # at the end — the fresh-build order.
+            cut_p = p_off[k0]
+            for j in range(len(pkey_l) - 1, cut_p - 1, -1):
+                g = groups[pkey_l[j]]
+                g.pop()
+                if not g:
+                    del groups[pkey_l[j]]
+            del mq_l[cut_p:]
+            del ct_l[cut_p:]
+            del fi_l[cut_p:]
+            del ksel_l[cut_p:]
+            del nh_l[cut_p:]
+            del home_l[cut_p:]
+            del rid_l[cut_p:]
+            del hold_l[cut_p:]
+            del pkey_l[cut_p:]
+            del dec_l[cut_p:]
+            del pair_req[cut_p:]
+            del sig[k0:]
+            del resident_pairs[r_off[k0]:]
+            del touch[t_off[k0]:]
+            del np_off[k0 + 1:]
+            del p_off[k0 + 1:]
+            del r_off[k0 + 1:]
+            del t_off[k0 + 1:]
+            n_pairs = np_off[k0]
+            st.pop("order_g", None)       # derived caches are now stale
+            st.pop("lid", None)
+            st.pop("p3", None)
+            for c in touch:               # prefix replica-LRU touch
+                c.last_access = step
+            for k in range(k0, nreq):
+                rq = requests[k]
+                rid = rq.req_id
+                home = rq.home
+                mq = rq.m_q
+                selflag = rid in selections
+                cids = rq.chunk_ids
+                # scalar cache key; the chunk-id list is checked by equality
+                # against the cached copy (identity-equal string elements
+                # make the compare a pointer scan, far cheaper than hashing
+                # a 12-string tuple every step)
+                rkey = (rid, home, mq, rq.k_selected, selflag)
+                ent = rcache.get(rkey)
+                if ent is not None and ent[-1] != cids:
+                    ent = None
+                if ent is None:
+                    srid = rid if selflag else -1
+                    span: Optional[set] = set() if selflag else None
+                    ksel = -1 if rq.k_selected is None else rq.k_selected
+                    s_res: List[ResidentPair] = []
+                    s_touch: List[object] = []
+                    s_ct: List[int] = []
+                    s_fi: List[int] = []
+                    s_nh: List[int] = []
+                    s_hold: List[int] = []
+                    s_key: List[tuple] = []
+                    for cid in cids:
+                        ci = idx_of[cid]
+                        s_touch.append(chunks[ci])
+                        live = live_tab[ci]
+                        if not live:
+                            # orphaned chunk -> object fallback; the half-
+                            # replayed step cache must not survive
+                            p1["step"] = None
+                            return None
+                        h = holder_tab[ci][home]
+                        if span is not None:
+                            span.add(h)
+                        if h == home:
+                            s_res.append(ResidentPair(rid, cid, home))
+                            continue
+                        s_ct.append(length_l[ci])
+                        s_fi.append(fi_tab[ci][home])
+                        s_nh.append(live)
+                        s_hold.append(h)
+                        s_key.append((h, ci, s_fi[-1], srid))
+                    if span is not None:
+                        # under an active selection the predicate's
+                        # n_holders is the M the request's selection SPANS
+                        # (§5.4) — distinct chosen holders over ALL its
+                        # pairs, resident shards counting their home — not
+                        # the chunk's replica count
+                        s_nh = [max(1, len(span))] * len(s_nh)
+                    seg = len(s_ct)
+                    s_dec = [self._pair_entry(mq, s_ct[x], s_fi[x], ksel,
+                                              s_nh[x]) for x in range(seg)]
+                    ent = (len(cids), s_touch, s_res, seg, [mq] * seg,
+                           s_ct, s_fi, [ksel] * seg, s_nh, [home] * seg,
+                           [rid] * seg, s_hold, s_key, s_dec, list(cids))
+                    rcache[rkey] = ent
+                (ncids, s_touch, s_res, seg, s_mq, s_ct, s_fi, s_ksel,
+                 s_nh, s_home, s_rid, s_hold, s_key, s_dec, _) = ent
+                sig.append((rid, home, mq, rq.k_selected, selflag,
+                            list(cids)))
+                n_pairs += ncids
+                touch.extend(s_touch)
+                for c in s_touch:
+                    c.last_access = step     # replica-LRU touch
+                if s_res:
+                    resident_pairs.extend(s_res)
+                if seg:
+                    i = len(mq_l)
+                    mq_l.extend(s_mq)
+                    ct_l.extend(s_ct)
+                    fi_l.extend(s_fi)
+                    ksel_l.extend(s_ksel)
+                    nh_l.extend(s_nh)
+                    home_l.extend(s_home)
+                    rid_l.extend(s_rid)
+                    hold_l.extend(s_hold)
+                    pair_req.extend([k] * seg)
+                    pkey_l.extend(s_key)
+                    dec_l.extend(s_dec)
+                    for gk in s_key:
+                        g = groups.get(gk)
+                        if g is None:
+                            groups[gk] = [i]
+                        else:
+                            g.append(i)
+                        i += 1
+                np_off.append(n_pairs)
+                p_off.append(len(mq_l))
+                r_off.append(len(resident_pairs))
+                t_off.append(len(touch))
+            st["n_pairs"] = n_pairs
+        # reuse, the one per-step-varying pricing column, is rebuilt from
+        # the live requests every step
+        reuse_l = [requests[k].expected_reuse_steps for k in pair_req]
+        n_resident = len(resident_pairs)
+        n_priced = len(mq_l)
+        replicas_spawned = 0
+
+        if n_pairs == 0:
+            return StepPlan(
+                step=step, requests=list(requests), records=[],
+                resident_pairs=[], n_pairs=0, n_priced=0, n_resident=0,
+                replicas_spawned=0, evictions=self._evictions_this_step,
+                selections=selections,
+                selection_fallbacks=selection_fallbacks,
+                arrays=StepPlanArrays.from_records(step, []))
+
+        # record rows under construction (row order == the object planner's
+        # record order; unzipped into columns at assembly) + per-pricing-
+        # kind row buckets
+        rows: List[tuple] = []
+        kr_i: List[int] = []
+        kr_kf: List[int] = []
+        kfh_i: List[int] = []
+        kfh_reuse: List[int] = []
+        kfh_p3: List[tuple] = []   # (persisted, m0, mem|None) per fetch row
+        kl_i: List[int] = []
+        ksr_i: List[int] = []
+        ksr_kf: List[int] = []
+        ksr_frac: List[float] = []
+        ksr_kb: List[int] = []
+        ksf_i: List[int] = []
+        ksf_kl: List[int] = []
+        ksf_kb: List[int] = []
+        ex_i: List[int] = []
+        ex_est: List[float] = []
+        ex_stages: List[tuple] = []
+
+        def _row(prim, holder_, cidx_, nreq, mqt, fi_, link, home_, sd,
+                 scnt, rids, backup=False):
+            rows.append((prim, holder_, cidx_, nreq, mqt, backup, fi_,
+                         link, home_, sd, scnt, rids))
+            return len(rows) - 1
+
+        if n_priced:
+            # -- phase 2: the §5 predicate per pair via the decision memo.
+            # A pair's three costs depend only on its pricing columns plus
+            # the reuse countdown, and the distinct column combos number a
+            # few hundred over a whole run — so each (columns, reuse) point
+            # is priced once (through the cm batch functions on 1-element
+            # arrays, bitwise the lane a full-width pass would produce) and
+            # every later occurrence is a dict probe.
+            code_l: List[int] = []
+            tf_l: List[float] = []
+            for E, re_ in zip(dec_l, reuse_l):
+                rd = E[4]
+                v = rd.get(re_)
+                if v is None:
+                    # dense fetch amortises bulk over reuse; the selection
+                    # scattered gather never amortises (§5.4)
+                    tf = E[2] if E[3] else E[2] / (re_ if re_ > 1 else 1)
+                    tr = E[0]
+                    tl = E[1]
+                    cdd = 0 if (tr <= tf and tr <= tl) else \
+                        (1 if tf <= tl else 2)
+                    v = rd[re_] = (cdd, tf)
+                code_l.append(v[0])
+                tf_l.append(v[1])
+
+            def _maj(mem: List[int]) -> int:
+                # max(votes, key=votes.get) returns the first-INSERTED code
+                # among tied maxima — the object planner's tie-break,
+                # expression for expression
+                if len(mem) == 1:
+                    return code_l[mem[0]]
+                votes: Dict[int, int] = {}
+                for j in mem:
+                    cj = code_l[j]
+                    votes[cj] = votes.get(cj, 0) + 1
+                return max(votes, key=votes.get)
+
+            gmaj = {key: (code_l[mem[0]] if len(mem) == 1 else _maj(mem))
+                    for key, mem in groups.items()}
+            kf_l: Optional[List[int]] = None
+            if cfg.congestion_aware:
+                # §8 link occupancy: transport-majority groups each put one
+                # flow on their (holder, fabric) link. Links are dense small
+                # ints (holder * 2 + fabric), so the per-pair occupancy is
+                # a plain-list scatter + gather (the arrays here are far
+                # below numpy's break-even); the pair -> link map is
+                # epoch-stable and cached with the step columns.
+                lid = st.get("lid")
+                if lid is None:
+                    lid = st["lid"] = [h * 2 + f
+                                       for h, f in zip(hold_l, fi_l)]
+                lcnt = [0] * (2 * len(self.instances))
+                for key, mj in gmaj.items():
+                    if mj != P.LOCAL_CODE:
+                        lcnt[key[0] * 2 + key[2]] += 1
+                kf_l = [lcnt[x] for x in lid]
+                hot = [i for i, v in enumerate(kf_l) if v >= 3] \
+                    if max(lcnt) >= 3 else []
+                if hot:
+                    # incremental repricing: the §8 premium is flat through
+                    # K<=2, so only pairs on links past the knee can price
+                    # differently — and congestion only enters the ROUTE
+                    # term, so reprice that one cost on the knee slice
+                    # (memoized per (m_q, fabric, k_flows) point) and re-run
+                    # the argmin against the uncontended fetch/local
+                    cong = self._cong_memo
+                    pay = cfg.payload
+                    for j in hot:
+                        E = dec_l[j]
+                        if E[3] and nh_l[j] > 1:
+                            trh = E[0]  # fan-out ROUTE is kf-independent
+                        else:
+                            ck = (mq_l[j], fi_l[j], kf_l[j])
+                            trh = cong.get(ck)
+                            if trh is None:
+                                trh = cong[ck] = float(
+                                    cm.t_route_congested_full_batch(
+                                        self._fa,
+                                        np.array([fi_l[j]], np.int64),
+                                        np.array([mq_l[j]], np.int64),
+                                        np.array([kf_l[j]], np.int64),
+                                        pay)[0])
+                        tf = tf_l[j]
+                        tl = E[1]
+                        code_l[j] = 2 if (tl < trh and tl < tf) else \
+                            (1 if tf < trh else 0)
+                    # only groups holding a repriced pair can change their
+                    # majority; every other group's votes are untouched
+                    for key in {pkey_l[j] for j in hot}:
+                        gmaj[key] = _maj(groups[key])
+
+            # -- phase-3/4 cache: when the whole step repeated AND the
+            # post-congestion codes, slowdowns, and fetch amortisations all
+            # match the step that built the cached assembly, the group walk
+            # is a pure replay — every row, stage, and est is bitwise the
+            # cached one (mutating walks — spawns, persists, evictions —
+            # bump the store version, which resets the epoch and this
+            # cache with it). Only the step stamp differs.
+            p3 = st.get("p3") if full_hit and not selections else None
+            if (p3 is not None and p3["code"] == code_l
+                    and p3["slow"] == slowdown):
+                new_kfh = [
+                    (reuse_l[m0] if mem is None
+                     else max(reuse_l[j] for j in mem)) if persisted else 1
+                    for persisted, m0, mem in p3["kfh_rows"]]
+                if new_kfh == p3["kfh_reuse"]:
+                    arr0 = p3["arrays"]
+                    arrays = dataclasses.replace(arr0, step=step)
+                    fa_memo = getattr(arr0, "_fa_memo", None)
+                    if fa_memo is not None:
+                        arrays._fa_memo = fa_memo
+                    return StepPlan(
+                        step=step, requests=list(requests), records=None,
+                        resident_pairs=resident_pairs, n_pairs=n_pairs,
+                        n_priced=n_priced, n_resident=n_resident,
+                        replicas_spawned=0,
+                        evictions=self._evictions_this_step,
+                        selections=selections,
+                        selection_fallbacks=selection_fallbacks,
+                        arrays=arrays)
+            # phase-3 iteration order: the object planner sorts first-
+            # occurrence group order stably by (holder, chunk_id) — dict
+            # insertion order IS first-occurrence order, and the stable
+            # sort preserves it between equal (holder, chunk_id) keys.
+            # Integer (holder, rank) keys stand in for the string pair
+            # (rank is the chunk-id sort rank, see _residency_mirror), and
+            # the sorted order is cached with the step's columns since it
+            # is a pure function of them.
+            order_g = st.get("order_g")
+            if order_g is None:
+                rank_l = mir["rank"]
+                order_g = st["order_g"] = sorted(
+                    groups.items(),
+                    key=lambda kv: (kv[0][0], rank_l[kv[0][1]]))
+            route_budget: Dict[Tuple[int, int], int] = {}
+            sel_get = selections.get
+            fanin_cap = cfg.fanin_cap
+            p99 = cfg.straggler_p99_factor
+            persist = cfg.persist_fetches
+
+            for key, mem in order_g:
+                hld, cidx_g, fi, srid = key
+                sel = sel_get(srid) if srid >= 0 else None
+                mj = gmaj[key]            # 0 ROUTE / 1 FETCH / 2 LOCAL
+                if mj == 0 and sel is None:
+                    budget = route_budget.get(key[:2], fanin_cap)
+                    keep = min(len(mem), max(0, budget))
+                    if keep < len(mem):
+                        overflow, mem = mem[keep:], mem[:keep]
+                        rep = self._spawn_replica_cols(
+                            ids[cidx_g], [home_l[j] for j in overflow],
+                            [mq_l[j] for j in overflow],
+                            [rid_l[j] for j in overflow])
+                        if rep is not None:
+                            i = _row(3, rep.holder, cidx_g,
+                                     rep.n_requesters, rep.m_q_total,
+                                     rep.fabric_idx, rep.link_instance,
+                                     rep.home, 1.0, len(rep.stages),
+                                     rep.req_ids)
+                            ex_i.append(i)
+                            ex_est.append(rep.est_cost_s)
+                            ex_stages.append(rep.stages)
+                            replicas_spawned += 1
+                        else:
+                            mem = mem + overflow
+                        if not mem:
+                            continue
+                    route_budget[key[:2]] = max(0, budget - len(mem))
+                m0 = mem[0]
+                nreq = len(mem)
+                if nreq == 1:
+                    mqt = mq_l[m0]
+                else:
+                    mqt = 0
+                    for j in mem:
+                        mqt += mq_l[j]
+                if mj == 2:
+                    if nreq == 1:
+                        hm = home_l[m0]
+                        kl_i.append(_row(2, hm, cidx_g, 1, mqt, -1, -1,
+                                         hm, slowdown[hm], 1,
+                                         (rid_l[m0],)))
+                        continue
+                    by_home: Dict[int, List[int]] = {}
+                    for j in mem:
+                        by_home.setdefault(home_l[j], []).append(j)
+                    for hm in sorted(by_home):
+                        ps = by_home[hm]
+                        kl_i.append(_row(
+                            2, hm, cidx_g, len(ps),
+                            sum(mq_l[j] for j in ps), -1, -1, hm,
+                            slowdown[hm], 1, tuple(rid_l[j] for j in ps)))
+                    continue
+                if nreq == 1:
+                    dest = home_l[m0]
+                    rids = (rid_l[m0],)
+                else:
+                    dest = self._busiest_home_cols(
+                        [home_l[j] for j in mem], [mq_l[j] for j in mem])
+                    rids = tuple([rid_l[j] for j in mem])
+                sd = slowdown[hld]
+                if sel is not None:
+                    bt = self.selector.block_tokens
+                    ct = ct_l[m0]
+                    kb_wire = min(max(1, -(-int(ksel_l[m0]) // bt)),
+                                  max(1, -(-ct // bt)))
+                    k_local = sel.k_on(ids[cidx_g])
+                    if mj == 0:
+                        ksr_i.append(_row(0, hld, cidx_g, nreq, mqt, fi,
+                                          hld, dest, sd, 6, rids))
+                        ksr_kf.append(kf_l[m0]
+                                      if kf_l is not None else 0)
+                        ksr_frac.append(min(1.0, k_local / max(1, ct)))
+                        ksr_kb.append(kb_wire)
+                    else:
+                        ksf_i.append(_row(1, hld, cidx_g, nreq, mqt, fi,
+                                          hld, dest, sd, 2, rids))
+                        ksf_kl.append(k_local)
+                        ksf_kb.append(kb_wire)
+                    continue
+                if mj == 0:
+                    kr_i.append(_row(0, hld, cidx_g, nreq, mqt, fi, hld,
+                                     dest, sd, 5, rids))
+                    kr_kf.append(kf_l[m0] if kf_l is not None else 0)
+                else:
+                    persisted = False
+                    if persist:
+                        persisted = self._make_resident(ids[cidx_g], dest)
+                    kfh_i.append(_row(1, hld, cidx_g, nreq, mqt, fi, hld,
+                                      dest, sd, 2, rids))
+                    kfh_reuse.append(
+                        (reuse_l[m0] if nreq == 1
+                         else max(reuse_l[j] for j in mem))
+                        if persisted else 1)
+                    kfh_p3.append((persisted, m0,
+                                   None if nreq == 1 else mem))
+                # straggler backup shadows dense route/fetch only
+                if sd >= p99:
+                    cid = ids[cidx_g]
+                    alt = [h for h in self.store.holders_of(cid)
+                           if h != hld and self.instances[h].alive]
+                    if alt:
+                        tgt = min(alt, key=lambda h: slowdown[h])
+                        h0 = home_l[m0]
+                        fab2 = self.fabric_between(h0, tgt)
+                        fi2 = self.fabric_idx_between(h0, tgt)
+                        sd2 = slowdown[tgt]
+                        if mj == 0:
+                            bcost = cm.t_route(fab2, mqt,
+                                               cfg.payload) * sd2
+                            bstages = cm.route_stages(fab2, mqt, 0,
+                                                      cfg.payload)
+                        else:
+                            ct = ct_l[m0]
+                            bcost = cm.t_fetch(fab2, ct,
+                                               cfg.payload) * sd2
+                            bstages = cm.fetch_stages(fab2, ct,
+                                                      cfg.payload)
+                        bstages = cm.scale_stages(bstages, sd2)
+                        bi = _row(mj, tgt,
+                                  cidx_g, nreq, mqt, fi2, tgt, dest, sd2,
+                                  len(bstages), rids, backup=True)
+                        ex_i.append(bi)
+                        ex_est.append(bcost)
+                        ex_stages.append(bstages)
+
+        # -- broadcast pricing: one template call per dispatch kind ---------
+        R = len(rows)
+        if R:
+            (r_prim, r_holder, r_cidx, r_nreq, r_mqt, r_backup, r_fi,
+             r_link, r_home, r_sd, r_scnt, r_rids) = zip(*rows)
+        else:
+            r_prim = r_holder = r_cidx = r_nreq = r_mqt = r_backup = \
+                r_fi = r_link = r_home = r_sd = r_scnt = r_rids = ()
+        # every row lands in exactly one pricing bucket and every stage slot
+        # is filled by its bucket's _fill (or the explicit-stage loop), so
+        # uninitialised allocation is safe here
+        est = np.empty(R, np.float64)
+        stage_off = np.zeros(R + 1, np.int64)
+        np.cumsum(np.asarray(r_scnt, np.int64), out=stage_off[1:])
+        S = int(stage_off[-1])
+        stage_code = np.empty(S, np.int64)
+        stage_dur = np.empty(S, np.float64)
+        fi_col = np.asarray(r_fi, np.int64)
+        mqt_col = np.asarray(r_mqt, np.int64)
+        cidx_col = np.asarray(r_cidx, np.int64)
+        sd_col = np.asarray(r_sd, np.float64)
+        length = mir["length"]
+        T = self._templates
+
+        def _fill(rows, codes, dur):
+            pos = stage_off[rows][:, None] + np.arange(codes.shape[0])
+            stage_code[pos] = codes
+            stage_dur[pos] = dur
+
+        if kr_i:
+            rows = np.asarray(kr_i, np.intp)
+            sd = sd_col[rows]
+            est[rows] = T.route_est(fi_col[rows], mqt_col[rows],
+                                    np.asarray(kr_kf, np.int64)) * sd
+            _fill(rows, _ROUTE_CODES,
+                  T.route(fi_col[rows], mqt_col[rows]) * sd[:, None])
+        if kfh_i:
+            rows = np.asarray(kfh_i, np.intp)
+            sd = sd_col[rows]
+            reuse = np.asarray(kfh_reuse, np.int64)
+            ct = length[cidx_col[rows]]
+            est[rows] = T.fetch_est(fi_col[rows], ct, reuse) * sd
+            _fill(rows, _FETCH_CODES,
+                  T.fetch(fi_col[rows], ct, reuse) * sd[:, None])
+        if kl_i:
+            rows = np.asarray(kl_i, np.intp)
+            sd = sd_col[rows]
+            ct = length[cidx_col[rows]]
+            est[rows] = T.local_est(ct) * sd
+            _fill(rows, _LOCAL_CODES, T.local(ct) * sd[:, None])
+        if ksr_i:
+            rows = np.asarray(ksr_i, np.intp)
+            sd = sd_col[rows]
+            frac = np.asarray(ksr_frac, np.float64)
+            kb = np.asarray(ksr_kb, np.int64)
+            kf = np.asarray(ksr_kf, np.int64)
+            d_index = self.selector.d_index
+            est[rows] = T.route_selected_est(
+                fi_col[rows], mqt_col[rows], kf, frac, kb, d_index) * sd
+            _fill(rows, _SELR_CODES,
+                  T.route_selected(fi_col[rows], mqt_col[rows], frac, kb,
+                                   d_index) * sd[:, None])
+        if ksf_i:
+            rows = np.asarray(ksf_i, np.intp)
+            sd = sd_col[rows]
+            kl = np.asarray(ksf_kl, np.int64)
+            kb = np.asarray(ksf_kb, np.int64)
+            d_index = self.selector.d_index
+            est[rows] = T.fetch_selected_est(
+                fi_col[rows], kl, mqt_col[rows], kb, d_index) * sd
+            _fill(rows, _SELF_CODES,
+                  T.fetch_selected(fi_col[rows], kl, mqt_col[rows], kb,
+                                   d_index) * sd[:, None])
+        for i, e, stages in zip(ex_i, ex_est, ex_stages):
+            est[i] = e
+            o = int(stage_off[i])
+            for j, (name, dur) in enumerate(stages):
+                stage_code[o + j] = TL.STAGE_CODE[name]
+                stage_dur[o + j] = dur
+
+        req_off = np.zeros(R + 1, np.int64)
+        np.cumsum(np.asarray([len(t) for t in r_rids], np.int64),
+                  out=req_off[1:])
+        arrays = StepPlanArrays(
+            step=step, chunk_ids=ids, prim=np.asarray(r_prim, np.int64),
+            holder=np.asarray(r_holder, np.int64), chunk=cidx_col,
+            n_requesters=np.asarray(r_nreq, np.int64), m_q_total=mqt_col,
+            est_cost_s=est, backup=np.asarray(r_backup, bool),
+            fabric_idx=fi_col, link_instance=np.asarray(r_link, np.int64),
+            home=np.asarray(r_home, np.int64), stage_off=stage_off,
+            stage_code=stage_code, stage_dur=stage_dur, req_off=req_off,
+            req_ids=np.asarray([q for t in r_rids for q in t], np.int64))
+        if n_priced and not selections and replicas_spawned == 0:
+            # the phase-3/4 replay cache (see the hit check above); a step
+            # with spawns mutated the store, so its assembly can never be
+            # replayed under the same epoch
+            st["p3"] = {"code": list(code_l), "slow": list(slowdown),
+                        "kfh_rows": kfh_p3, "kfh_reuse": list(kfh_reuse),
+                        "arrays": arrays}
+        return StepPlan(
+            step=step, requests=list(requests),
+            records=None, resident_pairs=resident_pairs,
+            n_pairs=n_pairs, n_priced=n_priced, n_resident=n_resident,
+            replicas_spawned=replicas_spawned,
+            evictions=self._evictions_this_step, selections=selections,
+            selection_fallbacks=selection_fallbacks, arrays=arrays)
+
     def _warn_selection_fallback(self) -> None:
         """A request carried k_selected but no selector is configured: the
         predicate PRICES the §5.4 selection regime while both backends
@@ -551,7 +1411,9 @@ class ServingEngine:
             sched_wall_s=wall_s,
             replicas_spawned=plan.replicas_spawned,
             evictions=plan.evictions,
-            max_dispatch_s=_critical_path(plan.records),
+            max_dispatch_s=(plan.arrays.critical_path_s()
+                            if plan.arrays is not None
+                            else _critical_path(plan.records)),
             serial_stage_s=timeline.serial_s,
             stage_totals=timeline.stage_totals(),
             n_selected=sum(len(rq.chunk_ids) for rq in plan.requests
@@ -575,9 +1437,15 @@ class ServingEngine:
     # -- internals -------------------------------------------------------------
 
     def _busiest_home(self, entries: List[_Pair]) -> int:
+        return self._busiest_home_cols([p.rq.home for p in entries],
+                                       [p.rq.m_q for p in entries])
+
+    def _busiest_home_cols(self, homes: List[int], m_qs: List[int]) -> int:
+        if len(homes) == 1:
+            return homes[0]
         by_home: Dict[int, int] = defaultdict(int)
-        for p in entries:
-            by_home[p.rq.home] += p.rq.m_q
+        for h, m in zip(homes, m_qs):
+            by_home[h] += m
         return max(by_home, key=by_home.get)
 
     def _occupancy_k_flows(self, pairs: List[_Pair],
@@ -606,19 +1474,27 @@ class ServingEngine:
                        overflow: List[_Pair]) -> Optional[DispatchRecord]:
         """Amortised FETCH: replicate the chunk onto the requester instance
         with the most overflow demand. None when pool pressure wins."""
-        target = self._busiest_home(overflow)
+        return self._spawn_replica_cols(
+            cid, [p.rq.home for p in overflow],
+            [p.rq.m_q for p in overflow],
+            [p.rq.req_id for p in overflow])
+
+    def _spawn_replica_cols(self, cid: str, homes: List[int],
+                            m_qs: List[int],
+                            rids: List[int]) -> Optional[DispatchRecord]:
+        target = self._busiest_home_cols(homes, m_qs)
         chunk = self.store.lookup(cid)
         fab = self.fabric_between(target, chunk.holder)
         if not self._make_resident(cid, target):
             return None
         return DispatchRecord(
-            self.step_idx, target, "fetch_replica", cid, len(overflow),
-            sum(p.rq.m_q for p in overflow),
+            self.step_idx, target, "fetch_replica", cid, len(homes),
+            sum(m_qs),
             cm.t_fetch(fab, chunk.length, self.cfg.payload),
             fabric_idx=self.fabric_idx_between(target, chunk.holder),
             link_instance=chunk.holder, home=target,
             stages=cm.fetch_stages(fab, chunk.length, self.cfg.payload),
-            req_ids=tuple(p.rq.req_id for p in overflow))
+            req_ids=tuple(rids))
 
     # -- faults ---------------------------------------------------------------
 
