@@ -80,8 +80,67 @@ def route_batched(cfg: MLAConfig, queries: Sequence[jax.Array],
 
 # ---------------------------------------------------------------------------
 # shard_map collectives (production path; `axis` is the instance mesh axis).
-# These run inside shard_map — callers supply per-shard arrays.
+# These run inside shard_map — callers supply per-shard arrays. The bodies
+# are split at collective boundaries into named stage functions so the
+# shard_map exec backend (ISSUE 7) can time each wire/compute stage
+# individually; route_fanout / route_pairwise stay the fused compositions.
 # ---------------------------------------------------------------------------
+
+def check_route_shards(axis: str, q_abs: jax.Array, local_ckv: jax.Array,
+                       local_valid: Optional[jax.Array] = None,
+                       shard: Optional[int] = None) -> None:
+    """Up-front shard-shape validation (ISSUE 7 satellite). A per-shard
+    B / S_local disagreement used to surface only as an opaque XLA
+    all_to_all / scan shape error deep in lowering; shapes are trace-time
+    constants, so every expressible mismatch can be rejected here with the
+    axis, the offending shard (when the caller knows it — per-shard input
+    assembly does) and both shapes in the message."""
+    where = f"mesh axis {axis!r}" + ("" if shard is None
+                                     else f", shard {shard}")
+    if q_abs.ndim < 2:
+        raise ValueError(
+            f"route shard on {where}: q_abs must be (..., B, H, d_qk), got "
+            f"shape {tuple(q_abs.shape)}")
+    if local_ckv.ndim != 2:
+        raise ValueError(
+            f"route shard on {where}: local_ckv must be (S_local, d_qk), "
+            f"got shape {tuple(local_ckv.shape)}")
+    if q_abs.shape[-1] != local_ckv.shape[-1]:
+        raise ValueError(
+            f"route shards disagree on {where}: q_abs has d_qk="
+            f"{q_abs.shape[-1]} but local_ckv has d_qk={local_ckv.shape[-1]} "
+            f"(shapes {tuple(q_abs.shape)} vs {tuple(local_ckv.shape)})")
+    if local_valid is not None \
+            and tuple(local_valid.shape) != (local_ckv.shape[0],):
+        raise ValueError(
+            f"route shards disagree on {where}: local_valid covers "
+            f"S_local={local_valid.shape[0] if local_valid.ndim else '?'} "
+            f"entries but local_ckv holds S_local={local_ckv.shape[0]} "
+            f"(shapes {tuple(local_valid.shape)} vs "
+            f"{tuple(local_ckv.shape)})")
+
+
+def fanout_gather(q_abs: jax.Array, axis: str = "instance") -> jax.Array:
+    """Fanout wire stage 1 (transfer): broadcast every instance's query
+    rows — (B, H, d) per shard -> (M, B, H, d) everywhere."""
+    return lax.all_gather(q_abs, axis)
+
+
+def fanout_exchange(part: Partial, axis: str = "instance",
+                    wire_dtype=None) -> Partial:
+    """Fanout wire stage 2 (return): deliver partials back — slice m of
+    the leading axis -> instance m. wire_dtype=bf16 gives the paper's
+    1032-B partial row (o bf16, m/l f32 — §3.2); None keeps full precision
+    (exactness tests)."""
+    o_wire = part.o if wire_dtype is None else part.o.astype(wire_dtype)
+    # barrier: keep the downstream f32 upcast from hoisting across the
+    # collective (would double the partial's wire bytes — §Perf P1)
+    o = lax.optimization_barrier(
+        lax.all_to_all(o_wire, axis, split_axis=0, concat_axis=0))
+    m = lax.all_to_all(part.m, axis, split_axis=0, concat_axis=0)
+    l = lax.all_to_all(part.l, axis, split_axis=0, concat_axis=0)
+    return Partial(o=o.astype(jnp.float32), m=m, l=l)
+
 
 def route_fanout(cfg: MLAConfig, q_abs: jax.Array, local_ckv: jax.Array,
                  local_valid: jax.Array, axis: str = "instance",
@@ -95,45 +154,53 @@ def route_fanout(cfg: MLAConfig, q_abs: jax.Array, local_ckv: jax.Array,
     (S_local,) bool — residency mask (scattered selection sets it per step).
     Returns this instance's fully-merged Partial (B, H, .).
     """
-    qs = lax.all_gather(q_abs, axis)                    # (M, B, H, d)
+    check_route_shards(axis, q_abs, local_ckv, local_valid)
+    qs = fanout_gather(q_abs, axis)                     # (M, B, H, d)
     fn = partial_fn or (lambda q, c, v: absorbed_partial(cfg, q, c, v))
     part = fn(qs, local_ckv, local_valid)               # (M, B, H, ...) on holder
-    # Deliver partials back: slice m of the leading axis -> instance m.
-    # wire_dtype=bf16 gives the paper's 1032-B partial row (o bf16, m/l f32
-    # — §3.2); None keeps full precision (exactness tests).
-    o_wire = part.o if wire_dtype is None else part.o.astype(wire_dtype)
-    # barrier: keep the downstream f32 upcast from hoisting across the
-    # collective (would double the partial's wire bytes — §Perf P1)
-    o = lax.optimization_barrier(
-        lax.all_to_all(o_wire, axis, split_axis=0, concat_axis=0))
-    m = lax.all_to_all(part.m, axis, split_axis=0, concat_axis=0)
-    l = lax.all_to_all(part.l, axis, split_axis=0, concat_axis=0)
-    return merge_stacked(o.astype(jnp.float32), m, l)   # (B, H, ...)
+    ex = fanout_exchange(part, axis, wire_dtype)
+    return merge_stacked(ex.o, ex.m, ex.l)              # (B, H, ...)
 
 
-def route_pairwise(cfg: MLAConfig, q_abs: jax.Array, local_ckv: jax.Array,
-                   local_partial: Partial, holder: int, requester: int,
-                   axis: str = "instance", wire_dtype=None) -> Partial:
-    """Single-holder route (§4 microbenchmark shape): requester ships q to
-    holder (one ppermute = the put), holder computes the partial over its
-    resident chunk, partial returns, requester merges with its own local
-    partial (its private suffix)."""
+def pairwise_ship(q_abs: jax.Array, holder: int, requester: int,
+                  axis: str = "instance") -> jax.Array:
+    """Pairwise wire stage 1 (transfer): the requester's query rows move to
+    the holder — one ppermute = the §4 put."""
     # optimization_barrier pins the wire dtype against convert-hoisting
     # across the collective. NOTE (EXPERIMENTS.md §Perf P1): on the CPU
     # backend the permute STILL lowers as f32 — XLA:CPU float-normalizes
     # bf16 collectives (verified on a bare bf16 ppermute); on TPU bf16
     # collectives are native, so the 1152-B wire row holds there.
-    q_at_holder = lax.optimization_barrier(
+    return lax.optimization_barrier(
         lax.ppermute(q_abs, axis, [(requester, holder)]))
-    part = absorbed_partial(cfg, q_at_holder, local_ckv)
+
+
+def pairwise_return(part: Partial, holder: int, requester: int,
+                    axis: str = "instance", wire_dtype=None) -> Partial:
+    """Pairwise wire stage 2 (return): the holder's partial travels back."""
     o_wire = part.o if wire_dtype is None else part.o.astype(wire_dtype)
-    back = Partial(
+    return Partial(
         o=lax.optimization_barrier(
             lax.ppermute(o_wire, axis,
                          [(holder, requester)])).astype(jnp.float32),
         m=lax.ppermute(part.m, axis, [(holder, requester)]),
         l=lax.ppermute(part.l, axis, [(holder, requester)]),
     )
+
+
+def route_pairwise(cfg: MLAConfig, q_abs: jax.Array, local_ckv: jax.Array,
+                   local_partial: Partial, holder: int, requester: int,
+                   axis: str = "instance", wire_dtype=None,
+                   local_valid: Optional[jax.Array] = None) -> Partial:
+    """Single-holder route (§4 microbenchmark shape): requester ships q to
+    holder (one ppermute = the put), holder computes the partial over its
+    resident chunk (through local_valid when the selection regime chose a
+    subset — §5.4), partial returns, requester merges with its own local
+    partial (its private suffix)."""
+    check_route_shards(axis, q_abs, local_ckv, local_valid)
+    q_at_holder = pairwise_ship(q_abs, holder, requester, axis)
+    part = absorbed_partial(cfg, q_at_holder, local_ckv, local_valid)
+    back = pairwise_return(part, holder, requester, axis, wire_dtype)
     return merge2(local_partial, back)
 
 
@@ -143,6 +210,7 @@ def route_ring(cfg: MLAConfig, q_abs: jax.Array, local_ckv: jax.Array,
     holder computes the visiting query's partial. After M hops the query is
     home with the full merge. Overlaps transfer with compute (beyond-paper;
     the TPU-native schedule for all-holders attention)."""
+    check_route_shards(axis, q_abs, local_ckv, local_valid)
     m_size = compat.axis_size(axis)
     perm = [(i, (i + 1) % m_size) for i in range(m_size)]
 

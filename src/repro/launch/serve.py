@@ -71,7 +71,7 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--steps", type=int, default=5)
     ap.add_argument("--pool-tokens", type=int, default=10_000_000)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--backend", choices=("analytic", "exec"),
+    ap.add_argument("--backend", choices=("analytic", "exec", "shard_map"),
                     default="analytic")
     ap.add_argument("--trace", default="",
                     help="replay a save_trace() JSON instead of generating")
@@ -111,8 +111,11 @@ def build_selector(args):
     trace (--selection-trace, numpy-only), or None (selection requests are
     priced but executed dense — the engine warns once and counts them)."""
     if args.selection:
-        from repro.serving.selection import IndexerService, SelectionConfig
-        return IndexerService(SelectionConfig(block_tokens=args.block_tokens))
+        from repro.serving.selection import (IndexerService, SelectionConfig,
+                                             ShardMapIndexerService)
+        svc = (ShardMapIndexerService if args.backend == "shard_map"
+               else IndexerService)
+        return svc(SelectionConfig(block_tokens=args.block_tokens))
     if args.selection_trace:
         from repro.serving.selection import ReplaySelector
         return ReplaySelector(args.selection_trace)
@@ -125,6 +128,9 @@ def build_engine(args) -> ServingEngine:
     if args.backend == "exec":
         from repro.serving.backends import JaxExecBackend
         backend = JaxExecBackend()
+    elif args.backend == "shard_map":
+        from repro.serving.backends import ShardMapExecBackend
+        backend = ShardMapExecBackend()
     else:
         backend = None
     return ServingEngine(
@@ -171,9 +177,9 @@ def build_trace(args, eng: ServingEngine, replay=None):
 
 def main(argv=None) -> None:
     args = build_parser().parse_args(argv)
-    if args.verify and args.backend != "exec":
+    if args.verify and args.backend not in ("exec", "shard_map"):
         raise SystemExit("--verify checks exec outputs against the §3.3 "
-                         "oracle: it requires --backend exec")
+                         "oracle: it requires --backend exec or shard_map")
     if args.trace and args.save_trace:
         raise SystemExit("--save-trace records a GENERATED trace; it cannot "
                          "be combined with --trace (replay)")
@@ -210,6 +216,11 @@ def main(argv=None) -> None:
             from repro.serving.backends.jax_exec import max_oracle_err
             line += f", max|err| {max_oracle_err(eng, reqs, s.step):.2e}"
         print(line)
+        report = eng.measured_reports[-1]
+        if report is not None:
+            # the shard_map backend's measured-vs-analytic loop (§7)
+            print("\n".join("[serve]   " + ln
+                            for ln in report.summary().splitlines()))
 
     if args.save_selection_trace:
         from repro.serving.selection import save_selection_trace

@@ -11,25 +11,32 @@ The planner (repro.serving.engine) emits a StepPlan; a backend runs it:
   LOCAL via absorbed_partial + merge. Returns actual decode outputs next
   to the analytic stage costs, so the §3.3 exactness claim is testable
   end-to-end THROUGH the scheduler, not just at the kernel layer.
-
-Later PRs swap in further backends (multi-host shard_map execution,
-overlapped real transfers) without touching the planner.
+* ShardMapExecBackend — the multi-host form (ISSUE 7): the chunk store's
+  canonical arrays partition across a device-mesh "instance" axis and
+  every planned transport runs as a REAL collective inside shard_map
+  (route_pairwise / route_fanout for ROUTE, core.splice.fetch_chunk /
+  fetch_scattered_gather for FETCH), with per-stage wall timings fed back
+  through timeline.measured_vs_analytic — the paper's §7 loop.
 """
 
 from repro.serving.backends.base import ExecutionBackend, StepExecution
 from repro.serving.backends.analytic import AnalyticBackend
 
 __all__ = ["ExecutionBackend", "StepExecution", "AnalyticBackend",
-           "JaxExecBackend", "TINY_MLA"]
+           "JaxExecBackend", "ShardMapExecBackend", "TINY_MLA"]
 
 _LAZY = ("JaxExecBackend", "TINY_MLA")
+_LAZY_SHARD = ("ShardMapExecBackend",)
 
 
 def __getattr__(name: str):
-    # jax_exec pulls in jax; the planner + analytic backend are numpy-only
-    # and must stay importable without it (chunk_store's documented
-    # contract), so the exec backend loads on first use.
+    # jax_exec / shard_map pull in jax; the planner + analytic backend are
+    # numpy-only and must stay importable without it (chunk_store's
+    # documented contract), so the exec backends load on first use.
     if name in _LAZY:
         from repro.serving.backends import jax_exec
         return getattr(jax_exec, name)
+    if name in _LAZY_SHARD:
+        from repro.serving.backends import shard_map
+        return getattr(shard_map, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -9,7 +9,8 @@ backend's job is to realize (or simulate) the planned transports.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Protocol, TYPE_CHECKING, runtime_checkable
+from typing import Any, Dict, Optional, Protocol, TYPE_CHECKING, \
+    runtime_checkable
 
 from repro.serving import timeline as TL
 from repro.serving.plan import StepPlan
@@ -28,10 +29,14 @@ class StepExecution:
         request attended this step. Empty for the analytic backend; the
         exec backend's outputs must reproduce single-instance attention to
         float round-off (§3.3), which tests/test_backends.py asserts.
+    measured — a timeline.MeasuredReport when the backend recorded real
+        per-stage wall timings for the step (the shard_map backend,
+        ISSUE 7); None for analytic / in-process execution.
     """
     timeline: TL.Timeline
     outputs: Dict[int, Any] = dataclasses.field(default_factory=dict)
     backend: str = ""
+    measured: Optional[TL.MeasuredReport] = None
 
 
 @runtime_checkable

@@ -76,6 +76,19 @@ def _stable_seed(*parts) -> int:
     return zlib.crc32(":".join(str(p) for p in parts).encode())
 
 
+def fetch_source(rec) -> int:
+    """The instance a fetch-kind dispatch pulls its bytes FROM — the wire's
+    source end. For every fetch-kind record the planner sets link_instance
+    to that source: plain "fetch" records carry link_instance == holder,
+    and "fetch_replica" spawns carry the canonical holder (their `holder`
+    field is the TARGET instance). One shared resolver (ISSUE 7 satellite):
+    _exec_fetch and _exec_fetch_selected used to resolve independently —
+    link_instance-for-fetch_replica vs always-rec.holder — a divergence
+    that delta-0 replication kept silent (every copy holds canonical
+    bytes) but that a delta-splice world would surface as wrong bytes."""
+    return rec.link_instance if rec.link_instance >= 0 else rec.holder
+
+
 def chunk_array(cfg: MLAConfig, chunk_id: str, length: int,
                 dtype=jnp.float32) -> jax.Array:
     """The canonical c^KV array of a chunk: (length, d_qk), deterministic
@@ -265,9 +278,7 @@ class JaxExecBackend:
         rotation — the §6.3 true-prefix re-home our store models), persist
         the replica array where the planner made it resident, then serve
         the group with LOCAL attention on the moved copy."""
-        src = (rec.link_instance if rec.primitive == "fetch_replica"
-               else rec.holder)
-        src_arr = self._array_on(store, rec.chunk_id, src)
+        src_arr = self._array_on(store, rec.chunk_id, fetch_source(rec))
         moved = splice_delta_rotate(src_arr, 0, self.cfg)
         dest = rec.home
         if dest >= 0 and store.resident_on(rec.chunk_id, dest):
@@ -290,6 +301,15 @@ class JaxExecBackend:
         core/splice), attend them at the requester, persist nothing (the
         selection is re-chosen every step). Single-process form of
         core.splice.fetch_scattered_gather + local attend."""
+        # fetch_replica-under-selection is unreachable by construction:
+        # replica spawns batch only DENSE fan-in overflow (selection pairs
+        # group per-request, srid >= 0, and never join a dense group), so a
+        # selected request can never ride a fetch_replica record. Pinned
+        # here so the source resolution below (fetch_source == rec.holder
+        # for plain fetch records) cannot silently diverge again.
+        assert rec.primitive == "fetch", (
+            f"selection fetch arrived as {rec.primitive!r}: replica spawns "
+            "must never batch selected requests")
         rid = rec.req_ids[0]
         idx = np.nonzero(np.asarray(sel.masks[rec.chunk_id]))[0]
         if idx.size == 0:
@@ -299,7 +319,7 @@ class JaxExecBackend:
             parts[rid].append(Partial.identity(
                 q.shape[:-1], self.cfg.kv_lora_rank))
             return
-        src_arr = self._array_on(store, rec.chunk_id, rec.holder)
+        src_arr = self._array_on(store, rec.chunk_id, fetch_source(rec))
         gathered = jnp.take(src_arr, jnp.asarray(idx), axis=0)
         parts[rid].append(
             absorbed_partial(self.cfg, q_of(rid), gathered))

@@ -147,6 +147,10 @@ class ServingEngine:
         # exec-mode decode outputs per step: req_id -> merged Partial
         # (empty dicts under the analytic backend)
         self.step_outputs: List[Dict[int, object]] = []
+        # measured-vs-analytic reports per step (ISSUE 7): a
+        # timeline.MeasuredReport when the backend timed real collectives
+        # (the shard_map backend), else None — parallel to self.stats
+        self.measured_reports: List[Optional[TL.MeasuredReport]] = []
         self.step_idx = 0
         # fabric table shared by every decide_batch call: idx 0 = intra-pod,
         # idx 1 = cross-pod
@@ -1390,6 +1394,7 @@ class ServingEngine:
         self.log.extend(plan.records)
         self.plans.append(plan)
         self.step_outputs.append(execution.outputs)
+        self.measured_reports.append(getattr(execution, "measured", None))
         if self.cfg.retain_outputs >= 0:
             # exactly one step falls out of the window per step
             idx = len(self.step_outputs) - self.cfg.retain_outputs - 1

@@ -504,6 +504,73 @@ _SIM_MEMO: Dict[tuple, tuple] = {}
 _SIM_MEMO_CAP = 512
 
 
+# ---------------------------------------------------------------------------
+# Measured-vs-analytic report (ISSUE 7): the shard_map exec backend records
+# WALL-CLOCK per-stage durations for every dispatch it executes on the real
+# device mesh; re-scheduling those measured flows through the same greedy
+# simulator yields a measured timeline directly comparable to the analytic
+# one — the paper's §7 model-validation loop, in-repo and continuous.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MeasuredReport:
+    """One step's measured-vs-analytic comparison.
+
+    analytic — the schedule the cost model priced (fabric constants of the
+        PLANNED hardware: probe floors, link bandwidths, HBM sweeps);
+    measured — the SAME flow structure (keys, resource binding, stage
+        order) re-simulated with per-stage wall-clock durations recorded
+        around the real collectives. Absolute ratios are only meaningful
+        when the fabric table was calibrated for the executing hardware
+        (benchmarks/calibrate_fabric.py); on forced host devices the value
+        of the report is the SHAPE agreement — which stages dominate,
+        how much overlap the schedule harvests — and the machinery itself.
+    """
+    step: int
+    analytic: Union[Timeline, "ArrayTimeline"]
+    measured: Timeline
+    wall_s: float = 0.0                 # end-to-end execute() wall clock
+
+    def stage_rows(self) -> List[Tuple[str, float, float, float]]:
+        """(stage, analytic_s, measured_s, measured/analytic) per stage
+        name, in STAGE_NAMES order; ratio is inf when analytic is 0."""
+        a, m = self.analytic.stage_totals(), self.measured.stage_totals()
+        rows = []
+        for name in STAGE_NAMES:
+            if name not in a and name not in m:
+                continue
+            av, mv = a.get(name, 0.0), m.get(name, 0.0)
+            rows.append((name, av, mv, mv / av if av > 0 else float("inf")))
+        return rows
+
+    @property
+    def makespan_ratio(self) -> float:
+        a = self.analytic.makespan_s
+        return self.measured.makespan_s / a if a > 0 else float("inf")
+
+    def summary(self) -> str:
+        lines = [
+            f"step {self.step}: makespan analytic "
+            f"{self.analytic.makespan_s * 1e6:9.1f}us  measured "
+            f"{self.measured.makespan_s * 1e6:9.1f}us  "
+            f"(x{self.makespan_ratio:.2f}, exec wall "
+            f"{self.wall_s * 1e3:.1f}ms)"]
+        for name, av, mv, ratio in self.stage_rows():
+            lines.append(f"  {name:<9} analytic {av * 1e6:9.1f}us  "
+                         f"measured {mv * 1e6:9.1f}us  (x{ratio:.2f})")
+        return "\n".join(lines)
+
+
+def measured_vs_analytic(step: int,
+                         analytic: Union[Timeline, "ArrayTimeline"],
+                         measured_flows: Sequence[Flow],
+                         wall_s: float = 0.0) -> MeasuredReport:
+    """Schedule the measured flows (same greedy policy as the analytic
+    side) and pair the two timelines into a MeasuredReport."""
+    return MeasuredReport(step, analytic, simulate(measured_flows), wall_s)
+
+
 def simulate_arrays(fa: FlowArrays) -> Union["ArrayTimeline", Timeline]:
     """Greedy earliest-start list scheduling via a lazy-reevaluation heap.
 

@@ -1,0 +1,189 @@
+"""ShardMapExecBackend end-to-end on a real 8-device mesh (subprocess-only:
+forces 8 host devices, so it must NOT run inside the main pytest process).
+
+The ISSUE 7 acceptance gate:
+
+* all three dense golden scenarios + the selection scenario execute with
+  real collectives and reproduce the single-instance oracles to float
+  round-off;
+* planner StepStats are bit-identical to the AnalyticBackend run
+  (sched_wall_s excepted — wall clock);
+* every transporting step yields a measured-vs-analytic MeasuredReport
+  whose flow structure matches the analytic schedule stage-for-stage;
+* the mesh indexer service (ShardMapIndexerService) returns the SAME
+  verdicts as the host IndexerService;
+* a dead holder mid-run (fail_instance) still reproduces the oracle
+  through the promoted replica;
+* shard-shape mismatches fail up front with named shards, not as opaque
+  XLA lowering errors.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import dataclasses
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.merge import Partial
+from repro.core.routing import check_route_shards
+from repro.serving import timeline as TL
+from repro.serving.backends import (AnalyticBackend, JaxExecBackend,
+                                    ShardMapExecBackend)
+from repro.serving.backends.jax_exec import max_oracle_err
+from repro.serving.backends.shard_map import check_instance_shards
+from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.serving.selection import (IndexerService, SelectionConfig,
+                                     ShardMapIndexerService)
+
+from engine_scenarios import SCENARIOS, selection_scenario
+
+TOL = 2e-5
+
+
+def stats_dict(st):
+    d = dataclasses.asdict(st)
+    d.pop("sched_wall_s")          # wall clock: the one non-deterministic
+    return d
+
+
+def run_engine(eng, steps):
+    for reqs in steps:
+        eng.schedule_step(reqs)
+    return eng
+
+
+def check_measured(eng, name):
+    """Every step got a MeasuredReport; its analytic side IS the step's
+    accounted timeline and the measured side mirrors the flow structure."""
+    for st, rep in zip(eng.stats, eng.measured_reports):
+        assert rep is not None, (name, st.step)
+        assert rep.analytic.makespan_s == st.latency_s, (name, st.step)
+        a_names = set(st.stage_totals)
+        m_names = set(rep.measured.stage_totals())
+        assert m_names == a_names, (name, st.step, a_names, m_names)
+        if a_names:                 # a transporting step measured real time
+            assert rep.measured.makespan_s > 0.0, (name, st.step)
+            assert rep.wall_s > 0.0, (name, st.step)
+
+
+def test_dense_scenarios():
+    for name, build in SCENARIOS.items():
+        eng_a = run_engine(*build(backend=AnalyticBackend()))
+        eng_m = run_engine(*build(backend=ShardMapExecBackend()))
+        assert [stats_dict(s) for s in eng_a.stats] \
+            == [stats_dict(s) for s in eng_m.stats], name
+        _, steps = build()
+        for reqs, st in zip(steps, eng_m.stats):
+            err = max_oracle_err(eng_m, reqs, st.step)
+            assert err <= TOL, (name, st.step, err)
+        check_measured(eng_m, name)
+        last = eng_m.measured_reports[-1]
+        print(f"  {name}: StepStats parity + oracle exact "
+              f"(last-step makespan ratio x{last.makespan_ratio:.2f})")
+    print(eng_m.measured_reports[0].summary())
+
+
+def test_selection_scenario():
+    eng_a = run_engine(*selection_scenario(
+        backend=AnalyticBackend(), selector=IndexerService()))
+    eng_r = run_engine(*selection_scenario(
+        backend=JaxExecBackend(), selector=IndexerService()))
+    eng_m = run_engine(*selection_scenario(
+        backend=ShardMapExecBackend(), selector=ShardMapIndexerService()))
+    # mesh indexer == host indexer, verdict for verdict
+    assert eng_m.selector.log.keys() == eng_r.selector.log.keys()
+    for step, verd in eng_r.selector.log.items():
+        mverd = eng_m.selector.log[step]
+        assert verd.keys() == mverd.keys(), step
+        for rid in verd:
+            assert verd[rid].blocks == mverd[rid].blocks, (step, rid)
+    # identical selections -> identical plans -> StepStats parity
+    assert [stats_dict(s) for s in eng_a.stats] \
+        == [stats_dict(s) for s in eng_m.stats]
+    _, steps = selection_scenario()
+    for reqs, st in zip(steps, eng_m.stats):
+        err = max_oracle_err(eng_m, reqs, st.step)
+        assert err <= TOL, ("selection", st.step, err)
+    check_measured(eng_m, "selection")
+    assert any(dt > 0.0 for dt in eng_m.selector.measured_index_s.values())
+    print("  selection: mesh indexer verdict parity + selection oracle "
+          "exact")
+
+
+def test_fanout_group():
+    """One dispatch group whose requesters span THREE homes: the fanout
+    (all_gather / all_to_all) route schedule, not the pairwise one."""
+    eng = ServingEngine(8, pool_tokens=10**6, cfg=EngineConfig(),
+                        instances_per_pod=8, backend=ShardMapExecBackend())
+    eng.register_chunk("fan", holder=0, length=256)
+    reqs = [Request(i, home=1 + i, chunk_ids=["fan"], m_q=8)
+            for i in range(3)]
+    eng.schedule_step(reqs)
+    grp = [r for r in eng.plans[0].records
+           if r.primitive == "route" and not r.backup]
+    assert any(r.n_requesters == 3 for r in grp), grp
+    err = max_oracle_err(eng, reqs, 1)
+    assert err <= TOL, err
+    print(f"  fanout group (3 homes, 1 dispatch): max|err| = {err:.2e}")
+
+
+def test_dead_holder():
+    """fail_instance mid-run: the promoted replica serves the next step's
+    plan and the mesh execution still reproduces the oracle (exec-mode
+    failover — ISSUE 7 satellite)."""
+    eng, steps = SCENARIOS["fetch_heavy"](backend=ShardMapExecBackend())
+    eng.schedule_step(steps[0])          # replicas persist on home 0
+    eng.fail_instance(1)                 # doc0's canonical holder dies
+    reqs = [Request(7, home=3, chunk_ids=["doc0"], m_q=4)]
+    eng.schedule_step(reqs)
+    err = max_oracle_err(eng, reqs, eng.stats[-1].step)
+    assert err <= TOL, err
+    print(f"  dead holder -> promoted replica: max|err| = {err:.2e}")
+
+
+def test_shape_validation():
+    # per-requester route shard mismatch names the shard and both shapes
+    q = jnp.zeros((4, 2, 24))
+    ckv = jnp.zeros((64, 16))            # wrong d_qk
+    try:
+        check_route_shards("instance", q, ckv, shard=3)
+        raise AssertionError("ragged route shard was accepted")
+    except ValueError as e:
+        msg = str(e)
+        assert "shard 3" in msg and "24" in msg and "16" in msg, msg
+    # ragged per-instance assembly names the shard and both shapes
+    try:
+        check_instance_shards({0: np.zeros((8, 4)), 2: np.zeros((7, 4))},
+                              (8, 4), 8)
+        raise AssertionError("ragged instance shard was accepted")
+    except ValueError as e:
+        msg = str(e)
+        assert "shard 2" in msg and "(7, 4)" in msg and "(8, 4)" in msg, msg
+    # a valid mask that disagrees with the cache raises the NAMED error at
+    # trace time, not an opaque XLA lowering failure
+    backend = ShardMapExecBackend()
+    eng = ServingEngine(4, pool_tokens=10**6, backend=backend)
+    eng.register_chunk("v", holder=1, length=64)
+    eng.schedule_step([Request(0, home=0, chunk_ids=["v"], m_q=2)])
+    try:
+        check_route_shards("instance", jnp.zeros((2, 2, 24)),
+                           jnp.zeros((64, 24)), jnp.zeros(63, bool))
+        raise AssertionError("ragged valid mask was accepted")
+    except ValueError as e:
+        assert "disagree" in str(e), e
+    print("  shape validation: named-shard ValueErrors up front")
+
+
+if __name__ == "__main__":
+    test_dense_scenarios()
+    test_selection_scenario()
+    test_fanout_group()
+    test_dead_holder()
+    test_shape_validation()
+    print("SHARD-MAP-EXEC-OK")

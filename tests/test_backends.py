@@ -96,9 +96,14 @@ class TestBackendParity:
         exe, steps_e = build(JaxExecBackend())
         assert [[dataclasses.asdict(r) for r in s] for s in steps_a] \
             == [[dataclasses.asdict(r) for r in s] for s in steps_e]
-        for reqs_a, reqs_e in zip(steps_a, steps_e):
-            ana.schedule_step(reqs_a)
-            exe.schedule_step(reqs_e)
+        # the workload's selection_frac puts some sessions in the §5.4
+        # regime with NO selector configured: the engines' warn-once
+        # fallback RuntimeWarning is intentional here — assert it instead
+        # of leaking it (tier-1 runs with filterwarnings = error)
+        with pytest.warns(RuntimeWarning, match="k_selected"):
+            for reqs_a, reqs_e in zip(steps_a, steps_e):
+                ana.schedule_step(reqs_a)
+                exe.schedule_step(reqs_e)
         assert [_record_key(r) for r in ana.log] \
             == [_record_key(r) for r in exe.log]
 
@@ -184,6 +189,92 @@ class TestExecExactness:
                                       query_for(TINY_MLA, r1, 5))
         assert not np.array_equal(query_for(TINY_MLA, r1, 5),
                                   query_for(TINY_MLA, r1, 6))
+
+
+# ---------------------------------------------------------------------------
+# Fetch source resolution + exec-mode failover (ISSUE 7 satellites).
+# ---------------------------------------------------------------------------
+
+
+class TestFetchSourceResolution:
+    def test_shared_resolver(self):
+        """Both fetch exec paths resolve the wire source through ONE
+        function: link_instance when the planner set it (fetch_replica
+        spawns carry the canonical holder there — their `holder` field is
+        the TARGET), else the record's holder."""
+        from repro.serving.backends.jax_exec import fetch_source
+        rec = dataclasses.make_dataclass(
+            "R", ["link_instance", "holder"])(link_instance=2, holder=5)
+        assert fetch_source(rec) == 2              # fetch_replica shape
+        rec = dataclasses.make_dataclass(
+            "R", ["link_instance", "holder"])(link_instance=-1, holder=5)
+        assert fetch_source(rec) == 5              # no-wire fallback
+
+    def test_selected_fetch_rejects_replica_spawn(self):
+        """fetch_replica-under-selection is unreachable by construction
+        (replica spawns batch only dense overflow); the exec path pins it
+        with an assertion so the source resolution cannot silently
+        diverge again."""
+        backend = JaxExecBackend()
+        rec = dataclasses.make_dataclass(
+            "R", ["primitive", "req_ids", "link_instance", "holder"])(
+            primitive="fetch_replica", req_ids=(0,), link_instance=1,
+            holder=2)
+        with pytest.raises(AssertionError, match="replica spawns"):
+            backend._exec_fetch_selected(None, rec, None, None, None)
+
+    def test_exec_serves_from_promoted_replica(self):
+        """Exec-mode failover: a persisted replica survives its canonical
+        holder's death (promotion), and the NEXT step's execution attends
+        the promoted copy — outputs stay exact (ISSUE 7 satellite)."""
+        eng, steps = SCENARIOS["fetch_heavy"](JaxExecBackend())
+        eng.schedule_step(steps[0])        # FETCHes persist replicas on 0
+        assert eng.store.array_on("doc0", 0) is not None
+        assert eng.fail_instance(1) == []  # doc0 promoted, not orphaned
+        assert eng.store.lookup("doc0").holder == 0
+        rq = Request(7, home=3, chunk_ids=["doc0"], m_q=4)
+        eng.schedule_step([rq])
+        _assert_step_exact(eng, [rq], eng.step_idx)
+
+    def test_analytic_and_exec_record_no_measured_report(self):
+        """measured_reports stays aligned with stats for every backend;
+        only the shard_map backend fills it (tested in the mesh prog)."""
+        for backend in (AnalyticBackend(), JaxExecBackend()):
+            eng, steps = SCENARIOS["routed_only"](backend)
+            for reqs in steps:
+                eng.schedule_step(reqs)
+            assert len(eng.measured_reports) == len(eng.stats)
+            assert all(r is None for r in eng.measured_reports)
+
+
+# ---------------------------------------------------------------------------
+# Up-front shard-shape validation (ISSUE 7 satellite; in-process — the
+# checks are host-side shape logic, no mesh needed).
+# ---------------------------------------------------------------------------
+
+
+class TestShardShapeValidation:
+    def test_route_shards_name_axis_shard_and_shapes(self):
+        from repro.core.routing import check_route_shards
+        with pytest.raises(ValueError, match=r"shard 3.*d_qk=24.*d_qk=16"):
+            check_route_shards("instance", np.zeros((4, 2, 24)),
+                               np.zeros((64, 16)), shard=3)
+        with pytest.raises(ValueError, match=r"S_local=63.*S_local=64"):
+            check_route_shards("instance", np.zeros((4, 2, 24)),
+                               np.zeros((64, 24)), np.zeros(63, bool))
+        # well-formed shards pass silently
+        check_route_shards("instance", np.zeros((4, 2, 24)),
+                           np.zeros((64, 24)), np.zeros(64, bool), shard=1)
+
+    def test_instance_shards_name_shard_and_both_shapes(self):
+        from repro.serving.backends.shard_map import check_instance_shards
+        with pytest.raises(ValueError,
+                           match=r"shard 2.*\(7, 4\).*\(8, 4\)"):
+            check_instance_shards({0: np.zeros((8, 4)),
+                                   2: np.zeros((7, 4))}, (8, 4), 8)
+        with pytest.raises(ValueError, match="outside the mesh"):
+            check_instance_shards({9: np.zeros((8, 4))}, (8, 4), 8)
+        check_instance_shards({0: np.zeros((8, 4))}, (8, 4), 8)
 
 
 # ---------------------------------------------------------------------------

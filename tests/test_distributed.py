@@ -36,6 +36,15 @@ def test_distributed_substrates():
     run_prog("dist_substrate_prog.py", expect="DIST-SUBSTRATE-OK")
 
 
+def test_shard_map_exec_backend():
+    """ISSUE 7: the ShardMapExecBackend runs every golden scenario + the
+    selection trace on an 8-device mesh with real collectives — oracle
+    exactness, analytic StepStats parity, measured-vs-analytic reports,
+    mesh-indexer verdict parity, exec-mode failover, shard validation."""
+    run_prog("shard_map_exec_prog.py", timeout=1200,
+             expect="SHARD-MAP-EXEC-OK")
+
+
 def test_distributed_dryrun_machinery():
     """build_lowered -> compile -> roofline extraction on small real
     meshes, incl. the multi-pod pod axis actually sharding."""
