@@ -303,21 +303,160 @@ def planner_bench(out_path: str = "BENCH_planner.json",
     return payload
 
 
+# ---------------------------------------------------------------------------
+# Execution-overlap artifact + CI floor (ISSUE 8).
+# ---------------------------------------------------------------------------
+
+
+def _exec_rep(backend, mode_steps: list) -> list:
+    """One repetition: a FRESH engine over the frozen mixed_congested
+    trace, the (possibly warm) backend reused so jit caches persist.
+    Returns the per-step MeasuredReports of transporting steps."""
+    import pathlib
+    import sys
+    tests_dir = str(pathlib.Path(__file__).resolve().parent.parent / "tests")
+    if tests_dir not in sys.path:
+        sys.path.insert(0, tests_dir)
+    from engine_scenarios import SCENARIOS
+    eng, steps = SCENARIOS["mixed_congested"](backend)
+    for reqs in steps:
+        eng.schedule_step(reqs)
+    reps = [r for r in eng.measured_reports
+            if r is not None and r.analytic.makespan_s > 0]
+    mode_steps.append(reps)
+    return reps
+
+
+def _exec_mode(fused: bool, repetitions: int) -> dict:
+    """Run `repetitions` fresh engines through ONE backend instance.
+    Rep 0 is COLD (every fused program compiles); the last rep is WARM
+    (executable + buffer caches hit). Reports per-step measured walls and
+    measured/analytic ratios for both, plus overlap efficiency."""
+    from repro.serving.backends import ShardMapExecBackend
+    backend = ShardMapExecBackend(fused=fused)
+    all_reps: list = []
+    for _ in range(repetitions):
+        _exec_rep(backend, all_reps)
+    cold, warm = all_reps[0], all_reps[-1]
+
+    def rows(reports):
+        return [{"step": r.step,
+                 "wall_ms": round(r.wall_s * 1e3, 3),
+                 "measured_makespan_ms": round(
+                     r.measured.makespan_s * 1e3, 3),
+                 "analytic_makespan_us": round(
+                     r.analytic.makespan_s * 1e6, 3),
+                 "ratio": round(r.makespan_ratio, 1),
+                 "overlap_efficiency": round(r.overlap_efficiency, 3),
+                 "stage_fills": r.stage_fills} for r in reports]
+
+    def pct(reports, q):
+        return float(np.percentile([r.makespan_ratio for r in reports], q))
+
+    return {
+        "mode": "fused" if fused else "serial",
+        "repetitions": repetitions,
+        "cold_steps": rows(cold),
+        "warm_steps": rows(warm),
+        "cold_ratio_p50": round(pct(cold, 50), 1),
+        "warm_ratio_p50": round(pct(warm, 50), 1),
+        "warm_ratio_p99": round(pct(warm, 99), 1),
+        "warm_wall_ms_p50": round(float(np.percentile(
+            [r.wall_s for r in warm], 50)) * 1e3, 3),
+        "warm_overlap_efficiency_p50": round(float(np.percentile(
+            [r.overlap_efficiency for r in warm], 50)), 3),
+        "pool_entries": warm[-1].pool_entries,
+        "pool_bytes": warm[-1].pool_bytes,
+        "stage_fills_total": int(sum(r.stage_fills
+                                     for reps in all_reps for r in reps)),
+    }
+
+
+def exec_bench(out_path: str = "BENCH_exec.json",
+               max_warm_ratio: float = 0.0,
+               min_improvement: float = 0.0,
+               repetitions: int = 3) -> dict:
+    """ISSUE 8: the serial (PR-7 staged_call chain) and fused/overlapped
+    execution paths side by side on the frozen mixed_congested trace over
+    an 8-device mesh. The host-independent gate is `min_improvement`
+    (serial warm p50 ratio / fused warm p50 ratio — the overlap win
+    itself); `max_warm_ratio` is a deliberately generous absolute ceiling
+    on the fused warm p50 (forced host devices time-share cores, so raw
+    ratios are large and host-dependent — the paper's §7 caveat)."""
+    import jax
+    if len(jax.devices()) < 8:
+        raise SystemExit(
+            "exec_bench needs an 8-device mesh: set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=8 before python starts")
+    serial = _exec_mode(fused=False, repetitions=repetitions)
+    fused = _exec_mode(fused=True, repetitions=repetitions)
+    improvement = (serial["warm_ratio_p50"] / fused["warm_ratio_p50"]
+                   if fused["warm_ratio_p50"] else float("inf"))
+    payload = {
+        "bench": "bench_serving_steadystate.exec_bench",
+        "workload": "tests/engine_scenarios.mixed_congested (8 instances, "
+                    "2 transporting steps: 4 hot routes + cold fetch + "
+                    "tiny local)",
+        "devices": len(jax.devices()),
+        "serial": serial,
+        "fused": fused,
+        # the number the tentpole is about: how much closer the fused +
+        # overlapped path gets measured wall to the analytic model
+        "warm_ratio_improvement": round(improvement, 2),
+        "gates": {"max_warm_ratio": max_warm_ratio,
+                  "min_improvement": min_improvement},
+    }
+    if out_path:
+        import pathlib
+        pathlib.Path(out_path).write_text(json.dumps(payload, indent=1)
+                                          + "\n")
+    if max_warm_ratio and fused["warm_ratio_p50"] > max_warm_ratio:
+        raise SystemExit(
+            f"exec overlap regression: fused warm p50 ratio "
+            f"{fused['warm_ratio_p50']:.0f} exceeds the ceiling "
+            f"{max_warm_ratio:.0f}")
+    if min_improvement and improvement < min_improvement:
+        raise SystemExit(
+            f"exec overlap regression: fused path only improves the warm "
+            f"measured/analytic ratio x{improvement:.2f} over serial "
+            f"(floor x{min_improvement:.2f})")
+    return payload
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--planner-bench", action="store_true",
                     help="run only the planner-throughput bench and write "
                          "the BENCH_planner.json artifact")
-    ap.add_argument("--out", default="BENCH_planner.json",
-                    help="planner artifact path ('' disables the write)")
+    ap.add_argument("--exec-bench", action="store_true",
+                    help="run only the execution-overlap bench (serial vs "
+                         "fused shard_map, needs 8 devices) and write the "
+                         "BENCH_exec.json artifact")
+    ap.add_argument("--out", default="",
+                    help="artifact path ('' = per-bench default; with "
+                         "--planner-bench/--exec-bench only)")
     ap.add_argument("--min-decisions-per-sec", type=float, default=0.0,
                     help="fail (exit 1) below this floor — the CI smoke")
     ap.add_argument("--best-of", type=int, default=3)
+    ap.add_argument("--max-warm-ratio", type=float, default=0.0,
+                    help="exec bench: fail if the fused warm p50 "
+                         "measured/analytic ratio exceeds this (0 = off)")
+    ap.add_argument("--min-improvement", type=float, default=0.0,
+                    help="exec bench: fail if serial/fused warm p50 ratio "
+                         "improvement is below this (0 = off)")
+    ap.add_argument("--repetitions", type=int, default=3,
+                    help="exec bench: engines per mode (rep 0 cold, "
+                         "last warm)")
     a = ap.parse_args()
     if a.planner_bench:
-        print(json.dumps(planner_bench(a.out, a.min_decisions_per_sec,
+        print(json.dumps(planner_bench(a.out or "BENCH_planner.json",
+                                       a.min_decisions_per_sec,
                                        a.best_of), indent=1))
+    elif a.exec_bench:
+        print(json.dumps(exec_bench(a.out or "BENCH_exec.json",
+                                    a.max_warm_ratio, a.min_improvement,
+                                    a.repetitions), indent=1))
     else:
         print(json.dumps({"steadystate": simulate(),
                           "selection_regime": selection_regime()},

@@ -1,0 +1,89 @@
+"""Where the fused execution path's wall time goes (ISSUE 8).
+
+Runs the frozen mixed_congested trace through the fused/overlapped
+shard_map backend and reads the backend's own phase accumulator
+(`phase_wall_total`) — the four phases of `_execute_overlapped`:
+
+  * stack    — host-side shard assembly + the ONE batched device_put
+               per step (`_StackBatch.commit`);
+  * dispatch — issuing every group's fused jitted program without
+               blocking (async dispatch; compile cost lands here on the
+               cold rep, warm reps are just launch overhead);
+  * barrier  — the single per-step block_until_ready over all launched
+               tasks (this is where the device compute is actually
+               waited out);
+  * merge    — wall attribution + stage apportioning + on-device merges
+               of the committed partials.
+
+Mirrors benchmarks/profile_planner.py for the execution side. Needs an
+8-device mesh (the mesh size is fixed at jax import, so the CALLER sets
+XLA_FLAGS):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src:. python benchmarks/profile_exec.py [--reps N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+
+
+def profile(repetitions: int, serial: bool = False) -> dict:
+    import jax
+    if len(jax.devices()) < 8:
+        raise SystemExit(
+            "profile_exec needs an 8-device mesh: set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=8 before python starts")
+    tests_dir = str(pathlib.Path(__file__).resolve().parent.parent / "tests")
+    if tests_dir not in sys.path:
+        sys.path.insert(0, tests_dir)
+    from engine_scenarios import SCENARIOS
+    from repro.serving.backends import ShardMapExecBackend
+
+    backend = ShardMapExecBackend(fused=not serial)
+    per_rep = []
+    for _ in range(repetitions):
+        eng, steps = SCENARIOS["mixed_congested"](backend)
+        t0 = time.perf_counter()
+        for reqs in steps:
+            eng.schedule_step(reqs)
+        per_rep.append(time.perf_counter() - t0)
+    return {"reps": per_rep, "split": dict(backend.phase_wall_total),
+            "last_step_split": dict(backend.phase_wall),
+            "mode": "serial" if serial else "fused"}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--reps", type=int, default=3,
+                    help="engines to run through one backend (rep 0 cold)")
+    ap.add_argument("--serial", action="store_true",
+                    help="profile the serial staged_call chain instead "
+                         "(no phase split: it has no stack/dispatch/"
+                         "barrier structure)")
+    a = ap.parse_args()
+    out = profile(a.reps, a.serial)
+    print(f"mode {out['mode']}; per-rep wall "
+          + " ".join(f"{1000 * t:.1f}ms" for t in out["reps"])
+          + " (rep 0 cold: compiles land there)")
+    total = sum(out["split"].values())
+    if not out["split"]:
+        print("  (no phase split recorded — serial mode bypasses "
+              "_execute_overlapped)")
+        return
+    print(f"phase split over all reps ({1000 * total:.1f} ms attributed):")
+    for name, v in sorted(out["split"].items(), key=lambda kv: -kv[1]):
+        share = v / total if total else 0.0
+        print(f"  {name:10s} {1000 * v:8.2f} ms  ({share:5.1%})")
+    last = sum(out["last_step_split"].values())
+    print(f"warmest step ({1000 * last:.1f} ms): "
+          + ", ".join(f"{k} {1000 * v:.2f}ms"
+                      for k, v in sorted(out["last_step_split"].items(),
+                                         key=lambda kv: -kv[1])))
+
+
+if __name__ == "__main__":
+    main()

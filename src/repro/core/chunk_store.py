@@ -94,6 +94,12 @@ class ChunkStore:
         # bumped on every residency mutation (register / replicate / evict /
         # fail-over / re-home) so readers can cache columnar snapshots
         self.version = 0
+        # copy-retirement listeners (ISSUE 8): callables (chunk_id, instance)
+        # notified when a copy on `instance` stops being attendable — replica
+        # LRU eviction or holder death — so device-side caches keyed on the
+        # (chunk, instance) pair (the shard_map backend's committed-copy
+        # pool) retire in lockstep with the control plane
+        self._evict_listeners: List = []
 
     # -- allocation ---------------------------------------------------------
     # _alloc[i] tracks tokens in use on instance i. Offsets handed out are
@@ -248,6 +254,17 @@ class ChunkStore:
         return [c.chunk_id for c in self._chunks.values()
                 if instance in c.replicas]
 
+    def add_evict_listener(self, fn) -> None:
+        """Register fn(chunk_id, instance), called whenever a copy on
+        `instance` is retired (LRU replica eviction, holder death).
+        Idempotent per callable."""
+        if fn not in self._evict_listeners:
+            self._evict_listeners.append(fn)
+
+    def _notify_evicted(self, chunk_id: str, instance: int) -> None:
+        for fn in self._evict_listeners:
+            fn(chunk_id, instance)
+
     def evict_replica(self, chunk_id: str, instance: int) -> None:
         """Retire a replica and return its tokens to the pool. The canonical
         copy is not evictable this way."""
@@ -263,6 +280,7 @@ class ChunkStore:
             self.free(instance,
                       c.length + c.replica_sidecar_tokens.pop(instance, 0))
             self.version += 1
+            self._notify_evicted(chunk_id, instance)
 
     def drop_holder(self, instance: int) -> List[str]:
         """Fault handling: instance died. Chunks whose only copy lived there
@@ -270,6 +288,9 @@ class ChunkStore:
         replicas promote one. Returns orphaned ids."""
         orphaned = []
         for c in self._chunks.values():
+            if instance in c.replicas or c.holder == instance:
+                # whichever copy lived on the dead instance is gone
+                self._notify_evicted(c.chunk_id, instance)
             if c.holder == instance:
                 if c.replicas:
                     c.holder = c.replicas.pop(0)

@@ -73,6 +73,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", choices=("analytic", "exec", "shard_map"),
                     default="analytic")
+    ap.add_argument("--serial-exec", action="store_true",
+                    help="shard_map backend: run dispatch groups through "
+                         "the PR-7 serial staged_call chain instead of the "
+                         "fused/overlapped path (A/B debug knob, ISSUE 8)")
     ap.add_argument("--trace", default="",
                     help="replay a save_trace() JSON instead of generating")
     ap.add_argument("--save-trace", default="",
@@ -130,7 +134,7 @@ def build_engine(args) -> ServingEngine:
         backend = JaxExecBackend()
     elif args.backend == "shard_map":
         from repro.serving.backends import ShardMapExecBackend
-        backend = ShardMapExecBackend()
+        backend = ShardMapExecBackend(fused=not args.serial_exec)
     else:
         backend = None
     return ServingEngine(
@@ -238,6 +242,9 @@ def main(argv=None) -> None:
               f"indexer-stage share of makespan "
               f"{index_s / mk if mk else 0.0:.3f}")
 
+    overview = eng.measured_overview()
+    if overview is not None:
+        print(f"[serve] exec: {overview}")
     lat = transport_latencies(eng.stats)
     n_route = sum(1 for r in eng.log if r.primitive == "route")
     print(f"[serve] backend={eng.backend.name}; total dispatches "

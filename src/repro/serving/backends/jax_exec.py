@@ -44,7 +44,7 @@ from __future__ import annotations
 
 import zlib
 from collections import defaultdict
-from typing import Dict, List, Optional, TYPE_CHECKING
+from typing import Dict, List, Optional, Tuple, TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
@@ -170,6 +170,29 @@ class JaxExecBackend:
     def __init__(self, cfg: MLAConfig = TINY_MLA, dtype=jnp.float32):
         self.cfg = cfg
         self.dtype = dtype
+        # query memo (ISSUE 8 satellite): query_for is deterministic in
+        # (seed, step, m_q), so the tensor is materialized ONCE per step
+        # at the backend level instead of per-execute()-closure — shared
+        # by every subclass (shard_map inherits). Entries older than the
+        # previous step are pruned when a new step arrives.
+        self._qmemo: Dict[Tuple[int, int, int], jax.Array] = {}
+        self._qmemo_step = -1
+
+    def query_of(self, rq: Request, step: int) -> jax.Array:
+        """Memoized query_for: the request's decode queries this step."""
+        if step != self._qmemo_step:
+            if step > self._qmemo_step:
+                self._qmemo = {k: v for k, v in self._qmemo.items()
+                               if k[1] >= step - 1}
+            else:                        # a fresh engine restarted the clock
+                self._qmemo.clear()
+            self._qmemo_step = step
+        seed = rq.req_id if rq.query_seed is None else rq.query_seed
+        key = (seed, step, rq.m_q)
+        q = self._qmemo.get(key)
+        if q is None:
+            q = self._qmemo[key] = query_for(self.cfg, rq, step, self.dtype)
+        return q
 
     # -- materialization ----------------------------------------------------
 
@@ -199,14 +222,10 @@ class JaxExecBackend:
                 plan: StepPlan) -> StepExecution:
         store = engine.store
         reqs: Dict[int, Request] = {rq.req_id: rq for rq in plan.requests}
-        queries: Dict[int, jax.Array] = {}
         sels = plan.selections
 
         def q_of(rid: int) -> jax.Array:
-            if rid not in queries:
-                queries[rid] = query_for(self.cfg, reqs[rid], plan.step,
-                                         self.dtype)
-            return queries[rid]
+            return self.query_of(reqs[rid], plan.step)
 
         def mask_of(rid: int, chunk_id: str) -> Optional[jax.Array]:
             """The indexer's (c_t,) token mask for this access, or None in

@@ -1537,3 +1537,25 @@ class ServingEngine:
                 and self.stats[step - 1].step == step:
             return self.step_outputs[step - 1]
         raise KeyError(f"no outputs recorded for step {step}")
+
+    def measured_overview(self) -> Optional[str]:
+        """One-line aggregate of the run's measured-vs-analytic reports
+        (None when no backend produced any): median/max makespan ratio
+        over transporting steps, median overlap efficiency, and the
+        committed-copy pool's final population (ISSUE 8)."""
+        reps = [r for r in self.measured_reports if r is not None]
+        if not reps:
+            return None
+        ratios = sorted(r.makespan_ratio for r in reps
+                        if r.analytic.makespan_s > 0)
+        if not ratios:
+            return None
+        eff = sorted(r.overlap_efficiency for r in reps
+                     if r.analytic.makespan_s > 0)
+        last = reps[-1]
+        return (f"measured/analytic ratio p50 x{ratios[len(ratios)//2]:.1f} "
+                f"max x{ratios[-1]:.1f} over {len(ratios)} transporting "
+                f"steps ({last.mode}); overlap efficiency p50 "
+                f"{eff[len(eff)//2]:.2f}; pool {last.pool_entries} entries/"
+                f"{last.pool_bytes}B; {sum(r.stage_fills for r in reps)} "
+                f"stage fills")

@@ -531,6 +531,13 @@ class MeasuredReport:
     analytic: Union[Timeline, "ArrayTimeline"]
     measured: Timeline
     wall_s: float = 0.0                 # end-to-end execute() wall clock
+    # execution-path telemetry (ISSUE 8): how the measured side ran
+    mode: str = "serial"                # "serial" per-stage | "fused" overlap
+    pool_entries: int = 0               # committed-copy cache population
+    pool_bytes: int = 0                 # ... and its device-buffer bytes
+    stage_fills: int = 0                # stage measurements apportioning had
+    #                                     to invent (planned durations all 0
+    #                                     or a serial stage went unmeasured)
 
     def stage_rows(self) -> List[Tuple[str, float, float, float]]:
         """(stage, analytic_s, measured_s, measured/analytic) per stage
@@ -549,13 +556,23 @@ class MeasuredReport:
         a = self.analytic.makespan_s
         return self.measured.makespan_s / a if a > 0 else float("inf")
 
+    @property
+    def overlap_efficiency(self) -> float:
+        """Measured makespan / sum of measured group walls: < 1.0 means
+        the executor actually ran independent groups concurrently."""
+        total = sum(self.measured.stage_totals().values())
+        return self.measured.makespan_s / total if total > 0 else 1.0
+
     def summary(self) -> str:
         lines = [
             f"step {self.step}: makespan analytic "
             f"{self.analytic.makespan_s * 1e6:9.1f}us  measured "
             f"{self.measured.makespan_s * 1e6:9.1f}us  "
             f"(x{self.makespan_ratio:.2f}, exec wall "
-            f"{self.wall_s * 1e3:.1f}ms)"]
+            f"{self.wall_s * 1e3:.1f}ms, {self.mode}, "
+            f"pool {self.pool_entries}/{self.pool_bytes}B"
+            + (f", {self.stage_fills} stage fills" if self.stage_fills
+               else "") + ")"]
         for name, av, mv, ratio in self.stage_rows():
             lines.append(f"  {name:<9} analytic {av * 1e6:9.1f}us  "
                          f"measured {mv * 1e6:9.1f}us  (x{ratio:.2f})")
@@ -565,10 +582,14 @@ class MeasuredReport:
 def measured_vs_analytic(step: int,
                          analytic: Union[Timeline, "ArrayTimeline"],
                          measured_flows: Sequence[Flow],
-                         wall_s: float = 0.0) -> MeasuredReport:
+                         wall_s: float = 0.0, *, mode: str = "serial",
+                         pool_entries: int = 0, pool_bytes: int = 0,
+                         stage_fills: int = 0) -> MeasuredReport:
     """Schedule the measured flows (same greedy policy as the analytic
     side) and pair the two timelines into a MeasuredReport."""
-    return MeasuredReport(step, analytic, simulate(measured_flows), wall_s)
+    return MeasuredReport(step, analytic, simulate(measured_flows), wall_s,
+                          mode=mode, pool_entries=pool_entries,
+                          pool_bytes=pool_bytes, stage_fills=stage_fills)
 
 
 def simulate_arrays(fa: FlowArrays) -> Union["ArrayTimeline", Timeline]:

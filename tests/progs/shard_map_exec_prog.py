@@ -16,6 +16,18 @@ The ISSUE 7 acceptance gate:
   through the promoted replica;
 * shard-shape mismatches fail up front with named shards, not as opaque
   XLA lowering errors.
+
+Extended by ISSUE 8 (overlapped dispatch-group execution):
+
+* every dense/selection check above runs in BOTH execution modes —
+  fused/overlapped (the default) and the serial staged_call chain
+  (`fused=False`, the A/B kill switch) — with identical StepStats;
+* fused-vs-serial outputs agree to <= 1e-6 on the golden scenarios AND
+  on randomized agentic workloads (several seeds);
+* the fused path apportions stage walls without gaps: stage_fills == 0
+  on every planned step (the _measured_flow silent-zero fix);
+* fetched committed copies live in a BOUNDED pool that retires entries
+  with their replicas (evict listener).
 """
 
 import os
@@ -72,21 +84,105 @@ def check_measured(eng, name):
             assert rep.wall_s > 0.0, (name, st.step)
 
 
+def max_ab_err(eng_f, eng_s, step):
+    """Worst |fused output - serial output| over one step's requests."""
+    outs_f, outs_s = eng_f.outputs_of(step), eng_s.outputs_of(step)
+    assert outs_f.keys() == outs_s.keys(), step
+    worst = 0.0
+    for rid, p in outs_f.items():
+        worst = max(worst, float(jnp.max(jnp.abs(p.o - outs_s[rid].o))))
+    return worst
+
+
 def test_dense_scenarios():
     for name, build in SCENARIOS.items():
         eng_a = run_engine(*build(backend=AnalyticBackend()))
-        eng_m = run_engine(*build(backend=ShardMapExecBackend()))
-        assert [stats_dict(s) for s in eng_a.stats] \
-            == [stats_dict(s) for s in eng_m.stats], name
+        eng_f = run_engine(*build(backend=ShardMapExecBackend()))
+        eng_s = run_engine(*build(backend=ShardMapExecBackend(fused=False)))
+        # BOTH modes must leave the planner's accounting untouched
+        want = [stats_dict(s) for s in eng_a.stats]
+        assert want == [stats_dict(s) for s in eng_f.stats], name
+        assert want == [stats_dict(s) for s in eng_s.stats], name
         _, steps = build()
-        for reqs, st in zip(steps, eng_m.stats):
-            err = max_oracle_err(eng_m, reqs, st.step)
-            assert err <= TOL, (name, st.step, err)
-        check_measured(eng_m, name)
-        last = eng_m.measured_reports[-1]
-        print(f"  {name}: StepStats parity + oracle exact "
+        ab = 0.0
+        for reqs, st in zip(steps, eng_f.stats):
+            for eng in (eng_f, eng_s):
+                err = max_oracle_err(eng, reqs, st.step)
+                assert err <= TOL, (name, st.step, err,
+                                    eng.backend.fused)
+            ab = max(ab, max_ab_err(eng_f, eng_s, st.step))
+        assert ab <= 1e-6, (name, ab)
+        for eng, mode in ((eng_f, "fused"), (eng_s, "serial")):
+            check_measured(eng, name)
+            for rep in eng.measured_reports:
+                assert rep.mode == mode, (name, rep.step, rep.mode)
+                # S6: apportioning covered every planned stage — a fill
+                # on these golden traces would mean a silent 0.0 again
+                assert rep.stage_fills == 0, (name, rep.step,
+                                              rep.stage_fills)
+        last = eng_f.measured_reports[-1]
+        print(f"  {name}: StepStats parity both modes + oracle exact, "
+              f"fused-vs-serial max|err| {ab:.2e} "
               f"(last-step makespan ratio x{last.makespan_ratio:.2f})")
-    print(eng_m.measured_reports[0].summary())
+    print(eng_f.measured_reports[0].summary())
+
+
+def test_randomized_ab():
+    """Fused vs serial on randomized agentic workloads (ISSUE 8 S3): the
+    SAME generated trace through both modes — bit-identical StepStats,
+    outputs within 1e-6, no apportioning gaps."""
+    from repro.serving.workload import (WorkloadConfig, agentic_trace,
+                                        materialize_trace, register_corpus)
+    for seed in (0, 7, 23):
+        def build(backend, seed=seed):
+            eng = ServingEngine(8, pool_tokens=24 * 256,
+                                cfg=EngineConfig(), instances_per_pod=4,
+                                backend=backend)
+            w = WorkloadConfig(n_steps=6, agents=6, n_corpus_chunks=10,
+                               chunk_tokens=256, session_steps=(2, 6),
+                               selection_frac=0.0, seed=seed)
+            cids = register_corpus(eng, w)
+            return eng, materialize_trace(agentic_trace(w, eng, cids))
+
+        eng_f, steps = build(ShardMapExecBackend())
+        eng_s, _ = build(ShardMapExecBackend(fused=False))
+        ab = 0.0
+        for reqs in steps:
+            eng_f.schedule_step(reqs)
+            eng_s.schedule_step(reqs)
+            step = eng_f.stats[-1].step
+            assert stats_dict(eng_f.stats[-1]) \
+                == stats_dict(eng_s.stats[-1]), (seed, step)
+            err = max_oracle_err(eng_f, reqs, step)
+            assert err <= TOL, (seed, step, err)
+            ab = max(ab, max_ab_err(eng_f, eng_s, step))
+        assert ab <= 1e-6, (seed, ab)
+        assert all(r.stage_fills == 0 for r in eng_f.measured_reports
+                   if r is not None), seed
+        print(f"  randomized A/B seed {seed}: {len(steps)} steps, "
+              f"fused-vs-serial max|err| {ab:.2e}")
+
+
+def test_pool_retirement():
+    """S1: fetch persistence fills the committed-copy pool; evicting the
+    replica (LRU path / fail_instance) retires the pooled buffer too."""
+    backend = ShardMapExecBackend()
+    eng, steps = SCENARIOS["fetch_heavy"](backend=backend)
+    eng.schedule_step(steps[0])            # three FETCHes persist on home 0
+    rep = eng.measured_reports[-1]
+    # 3 fetched copies on home 0 + 3 staged canonical copies at holders
+    assert rep.pool_entries == 6, rep.pool_entries
+    assert rep.pool_bytes > 0, rep.pool_bytes
+    assert ("doc0", 0) in backend._pool
+    eng.store.evict_replica("doc0", 0)
+    assert ("doc0", 0) not in backend._pool, "evict listener did not fire"
+    assert len(backend._pool) == 5
+    eng.fail_instance(0)                   # drop_holder retires the rest
+    assert not any(inst == 0 for _, inst in backend._pool), backend._pool
+    # the surviving canonical holders keep their committed copies
+    assert len(backend._pool) == 3, backend._pool
+    print("  pool retirement: evict_replica + fail_instance both drain "
+          "the committed-copy pool")
 
 
 def test_selection_scenario():
@@ -182,6 +278,8 @@ def test_shape_validation():
 
 if __name__ == "__main__":
     test_dense_scenarios()
+    test_randomized_ab()
+    test_pool_retirement()
     test_selection_scenario()
     test_fanout_group()
     test_dead_holder()

@@ -520,3 +520,119 @@ class TestRouteBatched:
         from repro.core.routing import route_batched
         with pytest.raises(ValueError):
             route_batched(TINY_MLA, [jnp.zeros((1, 2, 24))], [])
+
+
+# ---------------------------------------------------------------------------
+# Overlapped execution units (ISSUE 8) — everything here is single-device:
+# the fused path's host-side machinery (query memo, stage apportioning,
+# report telemetry, pool retirement hooks) without a mesh.
+# ---------------------------------------------------------------------------
+
+class TestExecOverlapUnits:
+    def test_query_memo_reuses_and_prunes(self):
+        from repro.serving.backends import JaxExecBackend
+        b = JaxExecBackend()
+        rq = Request(3, home=0, chunk_ids=["c"], m_q=4)
+        q1 = b.query_of(rq, 1)
+        assert b.query_of(rq, 1) is q1            # memo hit, same buffer
+        # a different request pinning the SAME query_seed shares the entry
+        twin = Request(9, home=1, chunk_ids=["c"], m_q=4, query_seed=3)
+        assert b.query_of(twin, 1) is q1
+        b.query_of(rq, 2)
+        assert (3, 1, 4) in b._qmemo              # previous step retained
+        b.query_of(rq, 4)
+        assert (3, 1, 4) not in b._qmemo          # ... then pruned
+        assert (3, 4, 4) in b._qmemo
+
+    def test_apportion_spreads_wall_over_planned_ratios(self):
+        from types import SimpleNamespace
+        from repro.serving.backends import ShardMapExecBackend
+        b = ShardMapExecBackend()
+        rec = SimpleNamespace(stages=[("probe", 1e-6), ("transfer", 3e-6)],
+                              req_ids=[0], chunk_id="c", primitive="route")
+        meas = b._apportion(rec, 8e-6, {}, 1)
+        assert meas["probe"] == pytest.approx(2e-6)
+        assert meas["transfer"] == pytest.approx(6e-6)
+        assert b._fill_count == 0
+
+    def test_apportion_zero_base_is_counted_fill(self):
+        from types import SimpleNamespace
+        from repro.serving.backends import ShardMapExecBackend
+        b = ShardMapExecBackend()
+        rec = SimpleNamespace(stages=[("pull", 0.0), ("splice", 0.0)],
+                              req_ids=[0], chunk_id="c", primitive="fetch")
+        meas = b._apportion(rec, 4e-6, {}, 1)
+        assert meas["pull"] == pytest.approx(2e-6)
+        assert meas["splice"] == pytest.approx(2e-6)
+        assert b._fill_count == 2                 # the S6 counter, not 0.0s
+
+    def test_apportion_index_stage_uses_selector_measurement(self):
+        from types import SimpleNamespace
+        from repro.serving.backends import ShardMapExecBackend
+        b = ShardMapExecBackend()
+        rec = SimpleNamespace(
+            stages=[("index", 9e-6), ("probe", 1e-6), ("compute", 1e-6)],
+            req_ids=[5], chunk_id="sel", primitive="route")
+        meas = b._apportion(rec, 6e-6, {(2, 5, "sel"): 7e-6}, 2)
+        assert meas["index"] == pytest.approx(7e-6)   # plan-time wall
+        # the fused wall is spread over the NON-index planned ratios only
+        assert meas["probe"] == pytest.approx(3e-6)
+        assert meas["compute"] == pytest.approx(3e-6)
+        assert b._fill_count == 0
+
+    def test_measured_report_telemetry(self):
+        import repro.serving.timeline as TL
+        flows = [TL.transport_flow(
+            "route:c@1#0", [("probe", 1e-6), ("transfer", 2e-6)],
+            link_res=TL.link(1, 0), holder_sm=TL.sm(1),
+            requester_sm=TL.sm(0), primitive="route", chunk_id="c")]
+        ana = TL.simulate(flows)
+        rep = TL.measured_vs_analytic(1, ana, flows, 0.5, mode="fused",
+                                      pool_entries=2, pool_bytes=64,
+                                      stage_fills=1)
+        assert (rep.mode, rep.pool_entries, rep.pool_bytes,
+                rep.stage_fills) == ("fused", 2, 64, 1)
+        head = rep.summary().splitlines()[0]
+        assert "makespan analytic" in head      # the CI smoke's grep line
+        assert "fused" in head and "pool 2/64B" in head
+        assert "1 stage fills" in head
+        assert rep.overlap_efficiency == pytest.approx(
+            ana.makespan_s / sum(ana.stage_totals().values()))
+        # defaults stay backward compatible (the serial path's call)
+        bare = TL.measured_vs_analytic(1, ana, flows)
+        assert (bare.mode, bare.pool_entries, bare.stage_fills) \
+            == ("serial", 0, 0)
+        assert "stage fills" not in bare.summary().splitlines()[0]
+
+    def test_measured_overview_aggregates(self):
+        import repro.serving.timeline as TL
+        eng = ServingEngine(2, pool_tokens=10**5)
+        assert eng.measured_overview() is None    # analytic-only run
+        flows = [TL.transport_flow(
+            "route:c@1#0", [("transfer", 2e-6)], link_res=TL.link(1, 0),
+            holder_sm=TL.sm(1), requester_sm=TL.sm(0), primitive="route",
+            chunk_id="c")]
+        ana = TL.simulate(flows)
+        eng.measured_reports = [
+            None, TL.measured_vs_analytic(1, ana, flows, 0.1, mode="fused",
+                                          pool_entries=3, pool_bytes=96)]
+        line = eng.measured_overview()
+        assert "ratio p50 x1.0" in line and "fused" in line
+        assert "pool 3 entries/96B" in line
+
+    def test_evict_listener_fires_on_evict_and_drop(self):
+        from repro.core.chunk_store import ChunkStore
+        st = ChunkStore(3, 10**4)
+        seen = []
+        listener = lambda cid, inst: seen.append((cid, inst))
+        st.add_evict_listener(listener)
+        st.add_evict_listener(listener)           # idempotent registration
+        st.register("c", holder=0, length=8, data=jnp.ones((8, 4)))
+        st.add_replica("c", 1)
+        st.set_replica_data("c", 1, jnp.ones((8, 4)))
+        st.evict_replica("c", 1)
+        assert seen == [("c", 1)]                 # fired once, not twice
+        st.add_replica("c", 2)
+        st.set_replica_data("c", 2, jnp.ones((8, 4)))
+        st.drop_holder(0)                         # holder dies, 2 promoted
+        assert seen == [("c", 1), ("c", 0)]
