@@ -94,6 +94,12 @@ def simulate(n_steps: int = N_STEPS, agents: int = AGENTS,
         "replicas_spawned": sum(s.replicas_spawned for s in stats),
         "evictions": sum(s.evictions for s in stats),
         "primitive_mix": dict(prim),
+        # planner-cache effectiveness for THIS engine/run (ISSUE 9):
+        # regressions in decisions_per_sec are attributable to cold caches
+        # vs slow code (timeline._SIM_MEMO is process-global; its separate
+        # counters are reported by planner_bench per position in the
+        # best-of sequence)
+        "planner_cache": eng.planner_cache_stats(),
     }
 
 
@@ -259,7 +265,16 @@ def planner_bench(out_path: str = "BENCH_planner.json",
     throughput artifact, and enforce an optional decisions/sec floor
     (the CI smoke — the floor is set WELL below a healthy run so only a
     real regression to object-path speeds trips it, not runner noise)."""
-    runs = [simulate() for _ in range(best_of)]
+    from repro.serving import timeline as TL
+    runs = []
+    memo_before = TL.sim_memo_stats()
+    memo_deltas = []
+    for _ in range(best_of):
+        runs.append(simulate())
+        memo_after = TL.sim_memo_stats()
+        memo_deltas.append({k: memo_after[k] - memo_before[k]
+                            for k in memo_after})
+        memo_before = memo_after
     # run 1 is COLD: every schedule is computed. Later runs of the same
     # trace hit timeline._SIM_MEMO (transport structures repeating
     # bit-for-bit reuse their schedule) — the steady-state regime the
@@ -289,6 +304,12 @@ def planner_bench(out_path: str = "BENCH_planner.json",
             cold["decisions_per_sec"] / PR4_BASELINE_QUOTED, 2),
         "speedup_cold_vs_dev_container": round(
             cold["decisions_per_sec"] / PR4_BASELINE_DEV_CONTAINER, 2),
+        # cache effectiveness (ISSUE 9): per-run planner-cache counters
+        # (fresh engine each run) and the process-global schedule-memo
+        # delta per run — run 1 cold, later runs memo-warm by design
+        "planner_cache_cold": cold["planner_cache"],
+        "planner_cache_best": best["planner_cache"],
+        "sim_memo_per_run": memo_deltas,
     }
     if out_path:
         import pathlib

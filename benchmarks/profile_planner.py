@@ -70,7 +70,12 @@ def profile(n_steps: int, agents: int, seed: int = 0) -> dict:
                              - acc.get("flow_arrays", 0.0))
     return {"total_s": total, "sched_wall_s": sched_wall,
             "decisions_per_sec": priced / sched_wall if sched_wall else 0.0,
-            "split": acc}
+            "split": acc,
+            # cache effectiveness (ISSUE 9): throughput regressions are
+            # attributable — a warm run that stops hitting these is slow
+            # for a DIFFERENT reason than one that was never warm
+            "planner_cache": eng.planner_cache_stats(),
+            "sim_memo": TL.sim_memo_stats()}
 
 
 def main() -> None:
@@ -85,6 +90,11 @@ def main() -> None:
           f"({out['decisions_per_sec']:,.0f} decisions/sec)")
     for name, v in sorted(out["split"].items(), key=lambda kv: -kv[1]):
         print(f"  {name:32s} {1000 * v:8.2f} ms")
+    pc = out["planner_cache"]
+    print("planner caches  "
+          + ", ".join(f"{k}={v}" for k, v in pc.items() if v))
+    print("schedule memo   "
+          + ", ".join(f"{k}={v}" for k, v in out["sim_memo"].items()))
 
 
 if __name__ == "__main__":

@@ -100,6 +100,9 @@ class ChunkStore:
         # (chunk, instance) pair (the shard_map backend's committed-copy
         # pool) retire in lockstep with the control plane
         self._evict_listeners: List = []
+        # lifetime replica-promotion count (drop_holder fail-over); read by
+        # the obs metrics registry alongside the evict-listener counters
+        self.promotions = 0
 
     # -- allocation ---------------------------------------------------------
     # _alloc[i] tracks tokens in use on instance i. Offsets handed out are
@@ -124,6 +127,17 @@ class ChunkStore:
 
     def capacity_left(self, instance: int) -> int:
         return self.pool_tokens - self._alloc[instance]
+
+    def sidecar_tokens_used(self, instance: int) -> int:
+        """Token-equivalents the index-key sidecars occupy on `instance`
+        (canonical charge on the holder, replica charges where they ride).
+        O(n_chunks) — an observability read, not a hot-path accessor."""
+        total = 0
+        for c in self._chunks.values():
+            if c.holder == instance:
+                total += c.sidecar_tokens
+            total += c.replica_sidecar_tokens.get(instance, 0)
+        return total
 
     def register(self, chunk_id: str, holder: int, length: int,
                  position_base: int = 0, data: Optional[Any] = None) -> Chunk:
@@ -294,6 +308,7 @@ class ChunkStore:
             if c.holder == instance:
                 if c.replicas:
                     c.holder = c.replicas.pop(0)
+                    self.promotions += 1
                     # the promoted replica's spliced copy becomes canonical
                     # (the dead instance's array is unreachable) — index
                     # sidecar promotes with it, and its token charge stays

@@ -107,7 +107,37 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--save-selection-trace", default="",
                     help="with --selection: record the indexer's per-step "
                          "verdicts as JSON")
+    # flight recorder (ISSUE 9)
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event / Perfetto JSON of the "
+                         "run: engine wall spans + planned (and, under "
+                         "--backend shard_map, measured) timeline track "
+                         "groups per step. Load at https://ui.perfetto.dev")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the obs metrics registry snapshot "
+                         "(counters/gauges/histograms) as JSON at exit")
+    ap.add_argument("--drift-threshold", type=float, default=None,
+                    help="enable the model-vs-measured drift monitor with "
+                         "this |EWMA| envelope (the paper's §7 claim is "
+                         "~0.07 on calibrated fabrics; forced host devices "
+                         "need a very loose value). Exits non-zero when a "
+                         "(primitive, fabric, stage) cell trips. Requires a "
+                         "measuring backend (shard_map)")
     return ap
+
+
+def build_obs(args):
+    """The flight recorder, from the CLI flags: None when every obs flag
+    is off (the engine then keeps its inert NULL_OBS and the planner hot
+    path pays nothing)."""
+    if not (args.trace_out or args.metrics_out
+            or args.drift_threshold is not None):
+        return None
+    from repro.obs import DriftConfig, DriftMonitor, Obs, Tracer
+    tracer = Tracer() if args.trace_out else None
+    drift = (DriftMonitor(DriftConfig(threshold=args.drift_threshold))
+             if args.drift_threshold is not None else None)
+    return Obs(tracer=tracer, drift=drift)
 
 
 def build_selector(args):
@@ -142,7 +172,8 @@ def build_engine(args) -> ServingEngine:
         cfg=EngineConfig(intra_pod_fabric=args.intra_fabric,
                          cross_pod_fabric=args.cross_fabric),
         instances_per_pod=max(1, args.instances // args.pods),
-        backend=backend, selector=build_selector(args))
+        backend=backend, selector=build_selector(args),
+        obs=build_obs(args))
 
 
 def apply_trace_meta(args, meta: dict, keys=TRACE_META_ARGS,
@@ -256,6 +287,38 @@ def main(argv=None) -> None:
         print(f"[serve] p50 step latency {np.percentile(lat, 50)*1e6:.0f}us, "
               f"p99 {np.percentile(lat, 99)*1e6:.0f}us over {len(lat)} "
               "transporting steps")
+
+    # -- flight recorder exports + drift verdict (ISSUE 9) -------------------
+    obs = eng.obs
+    if obs.enabled:
+        if args.trace_out and obs.tracer is not None:
+            doc = obs.tracer.export(args.trace_out)
+            print(f"[serve] trace -> {args.trace_out} "
+                  f"({len(doc['traceEvents'])} events, "
+                  f"{obs.tracer.n_steps} steps)")
+        if args.metrics_out and obs.metrics is not None:
+            obs.metrics.to_json(args.metrics_out)
+            snap = obs.metrics.snapshot()
+            print(f"[serve] metrics -> {args.metrics_out} "
+                  f"({len(snap['counters'])} counters, "
+                  f"{len(snap['gauges'])} gauges, "
+                  f"{len(snap['histograms'])} histograms)")
+        if obs.drift is not None:
+            for ln in obs.drift.summary_lines():
+                print(f"[serve] {ln}")
+            if obs.drift.n_reports == 0:
+                print("[serve] drift: no measured reports — the monitor "
+                      "needs --backend shard_map")
+            tripped = obs.drift.tripped()
+            if tripped:
+                raise SystemExit(
+                    f"[serve] drift monitor TRIPPED: {len(tripped)} "
+                    f"cell(s) past |ewma| > "
+                    f"{obs.drift.config.threshold:g} — the fabric table "
+                    f"no longer tracks measured walls (recalibrate via "
+                    f"benchmarks/calibrate_fabric.py)")
+            print(f"[serve] drift: OK ({len(obs.drift.cells)} cells within "
+                  f"|ewma| <= {obs.drift.config.threshold:g})")
 
 
 if __name__ == "__main__":

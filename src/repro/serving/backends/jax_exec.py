@@ -177,6 +177,9 @@ class JaxExecBackend:
         # previous step are pruned when a new step arrives.
         self._qmemo: Dict[Tuple[int, int, int], jax.Array] = {}
         self._qmemo_step = -1
+        # query-memo effectiveness (ISSUE 9), read by the obs registry
+        self.qmemo_hits = 0
+        self.qmemo_misses = 0
 
     def query_of(self, rq: Request, step: int) -> jax.Array:
         """Memoized query_for: the request's decode queries this step."""
@@ -191,7 +194,10 @@ class JaxExecBackend:
         key = (seed, step, rq.m_q)
         q = self._qmemo.get(key)
         if q is None:
+            self.qmemo_misses += 1
             q = self._qmemo[key] = query_for(self.cfg, rq, step, self.dtype)
+        else:
+            self.qmemo_hits += 1
         return q
 
     # -- materialization ----------------------------------------------------

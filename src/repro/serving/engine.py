@@ -123,7 +123,7 @@ class ServingEngine:
                  cfg: EngineConfig = EngineConfig(),
                  instances_per_pod: int = 0,
                  backend: Optional[ExecutionBackend] = None,
-                 selector=None):
+                 selector=None, obs=None):
         self.cfg = cfg
         self.store = ChunkStore(n_instances, pool_tokens)
         ipp = instances_per_pod or n_instances
@@ -169,6 +169,27 @@ class ServingEngine:
         # Both are pure functions of the cost model, never invalidated.
         self._dec_memo: Dict[tuple, list] = {}
         self._cong_memo: Dict[tuple, float] = {}
+        # planner-cache effectiveness counters (ISSUE 9): plain ints bumped
+        # on the hot path (one integer add each — cheap enough to keep
+        # unconditionally), published through planner_cache_stats() and the
+        # obs metrics registry. sig = per-request signature cache, step =
+        # full-step column replay, p3 = phase-3/4 assembly replay, dec =
+        # §5 decision memo, obj_fallback = array planner bailed to objects.
+        self._n_sig_hit = 0
+        self._n_sig_miss = 0
+        self._n_step_replay_hit = 0
+        self._n_step_replay_miss = 0
+        self._n_p3_hit = 0
+        self._n_dec_hit = 0
+        self._n_dec_miss = 0
+        self._n_obj_fallback = 0
+        # the flight recorder (ISSUE 9): NULL_OBS is an inert singleton —
+        # the step path pays one identity comparison when observability is
+        # off. A live Obs gets every accounted step via obs.on_step.
+        from repro.obs import NULL_OBS
+        self.obs = NULL_OBS if obs is None else obs
+        if self.obs.enabled:
+            self.obs.bind_engine(self)
 
     # -- topology -------------------------------------------------------------
 
@@ -239,6 +260,7 @@ class ServingEngine:
                                           selection_fallbacks)
             if plan is not None:
                 return plan
+            self._n_obj_fallback += 1
         return self._plan_step_objects(requests, selections,
                                        selection_fallbacks)
 
@@ -666,6 +688,10 @@ class ServingEngine:
         memo = self._dec_memo
         key = (mq, ct, fi, ksel, nh)
         ent = memo.get(key)
+        if ent is not None:
+            self._n_dec_hit += 1
+        else:
+            self._n_dec_miss += 1
         if ent is None:
             fa = self._fa
             pay = self.cfg.payload
@@ -775,6 +801,10 @@ class ServingEngine:
             if 0 <= force_k0 < k0:
                 k0 = force_k0
         full_hit = k0 == nreq
+        if full_hit:
+            self._n_step_replay_hit += 1
+        else:
+            self._n_step_replay_miss += 1
         if full_hit:                                 # whole step repeated
             for c in st["touch"]:            # replica-LRU touch, idempotent
                 c.last_access = step
@@ -863,6 +893,10 @@ class ServingEngine:
                 ent = rcache.get(rkey)
                 if ent is not None and ent[-1] != cids:
                     ent = None
+                if ent is not None:
+                    self._n_sig_hit += 1
+                else:
+                    self._n_sig_miss += 1
                 if ent is None:
                     srid = rid if selflag else -1
                     span: Optional[set] = set() if selflag else None
@@ -1092,6 +1126,7 @@ class ServingEngine:
                      else max(reuse_l[j] for j in mem)) if persisted else 1
                     for persisted, m0, mem in p3["kfh_rows"]]
                 if new_kfh == p3["kfh_reuse"]:
+                    self._n_p3_hit += 1
                     arr0 = p3["arrays"]
                     arrays = dataclasses.replace(arr0, step=step)
                     fa_memo = getattr(arr0, "_fa_memo", None)
@@ -1382,11 +1417,37 @@ class ServingEngine:
         """One decode step end-to-end: plan the transports, execute them on
         the configured backend, account the StepStats. Returns the planned
         records (the engine's historical contract)."""
+        obs = self.obs
         t_wall0 = time.perf_counter()
         plan = self.plan_step(requests)
+        t_plan = time.perf_counter()
         execution = self.backend.execute(self, plan)
-        self._account(plan, execution, time.perf_counter() - t_wall0)
+        t_exec = time.perf_counter()
+        self._account(plan, execution, t_exec - t_wall0)
+        if obs.enabled:
+            # everything observability-heavy happens HERE — after
+            # sched_wall_s was measured, outside the planner wall
+            obs.on_step(self, plan, execution, self.stats[-1],
+                        (t_wall0, t_plan, t_exec, time.perf_counter()))
         return plan.records
+
+    def planner_cache_stats(self) -> Dict[str, int]:
+        """Cumulative planner-cache effectiveness counters (ISSUE 9):
+        hit/miss for the per-request signature cache, the full-step column
+        replay, the phase-3/4 assembly replay, the §5 decision memo, and
+        array->object planner fallbacks. (The timeline's schedule-memo
+        counters live in timeline.sim_memo_stats() — module-global, like
+        the memo itself.)"""
+        return {
+            "sig_hit": self._n_sig_hit,
+            "sig_miss": self._n_sig_miss,
+            "step_replay_hit": self._n_step_replay_hit,
+            "step_replay_miss": self._n_step_replay_miss,
+            "p3_replay_hit": self._n_p3_hit,
+            "dec_memo_hit": self._n_dec_hit,
+            "dec_memo_miss": self._n_dec_miss,
+            "object_fallbacks": self._n_obj_fallback,
+        }
 
     def _account(self, plan: StepPlan, execution: StepExecution,
                  wall_s: float) -> None:

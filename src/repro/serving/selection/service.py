@@ -81,6 +81,23 @@ class IndexerService:
         # every verdict, by engine step — the recordable selection trace
         # (repro.serving.selection.replay.save_selection_trace)
         self.log: Dict[int, Dict[int, RequestSelection]] = {}
+        # service telemetry (ISSUE 9), read by the obs metrics registry:
+        # roundtrips = per-(request, chunk) scoring round trips, merges =
+        # requester-side global merges, merge_candidates / merge_selected =
+        # cumulative candidate-in / block-out volumes of those merges.
+        self.obs_counts: Dict[str, int] = {
+            "roundtrips": 0, "merges": 0,
+            "merge_candidates": 0, "merge_selected": 0}
+        # per-merge candidate-set sizes since the last drain — bounded by
+        # the obs layer draining every step into a streaming histogram
+        self._merge_sizes: List[int] = []
+
+    def drain_merge_sizes(self) -> List[int]:
+        """Per-merge candidate counts accumulated since the last call
+        (the obs layer folds them into a histogram once per step)."""
+        out = self._merge_sizes
+        self._merge_sizes = []
+        return out
 
     # -- sidecar materialization --------------------------------------------
 
@@ -158,6 +175,10 @@ class IndexerService:
                 cands.append((-s, pos, b))
         cands.sort()
         chosen = cands[:k_blocks]
+        self.obs_counts["merges"] += 1
+        self.obs_counts["merge_candidates"] += len(cands)
+        self.obs_counts["merge_selected"] += len(chosen)
+        self._merge_sizes.append(len(cands))
         blocks: Dict[str, Tuple[int, ...]] = {cid: () for cid in rq.chunk_ids}
         for _, pos, b in chosen:
             cid = rq.chunk_ids[pos]
@@ -181,6 +202,7 @@ class IndexerService:
             length = store.lookup(cid).length
             k = (k_blocks if truncate_local
                  else -(-length // self.block_tokens))
+            self.obs_counts["roundtrips"] += 1
             pooled = self.pooled_scores(store, rq, iq, cid, step)
             per_chunk[cid] = self.topk_from_pooled(pooled, k)
         sel = self._merge(rq, per_chunk, k_blocks)

@@ -503,6 +503,17 @@ def _seq_sum(values: np.ndarray) -> float:
 _SIM_MEMO: Dict[tuple, tuple] = {}
 _SIM_MEMO_CAP = 512
 
+# schedule-memo effectiveness counters (ISSUE 9): module-global like the
+# memo itself. inst_hit = the planner handed back the SAME FlowArrays
+# object (step replay), memo_hit = structure-fingerprint hit, miss = the
+# heap scheduler actually ran. Published via the obs metrics registry.
+_SIM_STATS = {"inst_hit": 0, "memo_hit": 0, "miss": 0}
+
+
+def sim_memo_stats() -> Dict[str, int]:
+    """Snapshot of the _SIM_MEMO hit/miss counters."""
+    return dict(_SIM_STATS)
+
 
 # ---------------------------------------------------------------------------
 # Measured-vs-analytic report (ISSUE 7): the shard_map exec backend records
@@ -620,6 +631,7 @@ def simulate_arrays(fa: FlowArrays) -> Union["ArrayTimeline", Timeline]:
     # fingerprint needs recomputing
     inst_cached = getattr(fa, "_sim_memo", None)
     if inst_cached is not None:
+        _SIM_STATS["inst_hit"] += 1
         return ArrayTimeline(fa, *inst_cached)
     S = int(fa.dur.shape[0])
     F = fa.n_flows
@@ -629,8 +641,10 @@ def simulate_arrays(fa: FlowArrays) -> Union["ArrayTimeline", Timeline]:
                 fa.code.tobytes(), fa.resources)
     cached = _SIM_MEMO.get(memo_key)
     if cached is not None:
+        _SIM_STATS["memo_hit"] += 1
         fa._sim_memo = cached
         return ArrayTimeline(fa, *cached)
+    _SIM_STATS["miss"] += 1
     off_l = fa.offsets.tolist()
     dur_l = fa.dur.tolist()
     res_l = fa.res.tolist()

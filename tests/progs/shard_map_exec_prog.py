@@ -28,6 +28,12 @@ Extended by ISSUE 8 (overlapped dispatch-group execution):
   on every planned step (the _measured_flow silent-zero fix);
 * fetched committed copies live in a BOUNDED pool that retires entries
   with their replicas (evict listener).
+
+Extended by ISSUE 9 (flight recorder): one traced run must export planned
+AND measured track groups, publish the exec-side metric series, and the
+drift monitor must be LOUD on forced host devices (whose walls sit orders
+of magnitude off the fabric model — silence there would mean the monitor
+is broken).
 """
 
 import os
@@ -243,6 +249,50 @@ def test_dead_holder():
     print(f"  dead holder -> promoted replica: max|err| = {err:.2e}")
 
 
+def test_flight_recorder():
+    """ISSUE 9 on the real mesh: the tracer renders planned AND measured
+    track groups from one run, the registry picks up the exec-side series
+    (phase walls, stage_fills, pool occupancy), and the drift monitor
+    folds every MeasuredReport. Forced host devices run 10-5000x slower
+    than the fabric model, so drift MUST trip at the calibrated 7% — we
+    assert the trip (the monitor is loud where it should be) instead of
+    pretending the fit holds here."""
+    from repro.obs import DriftConfig, DriftError, DriftMonitor, Obs, Tracer
+    from repro.obs.trace import PID_MEASURED, PID_PLANNED, validate_trace
+
+    eng, steps = SCENARIOS["mixed_congested"](backend=ShardMapExecBackend())
+    obs = Obs(tracer=Tracer(), drift=DriftMonitor(DriftConfig(
+        threshold=0.07, min_samples=1)))
+    eng.obs = obs
+    obs.bind_engine(eng)
+    run_engine(eng, steps)
+
+    doc = obs.tracer.export()
+    assert validate_trace(doc) == [], validate_trace(doc)
+    steps_by_pid = {
+        pid: [e for e in doc["traceEvents"] if e["ph"] == "X"
+              and e["pid"] == pid and e.get("cat") == "step"]
+        for pid in (PID_PLANNED, PID_MEASURED)}
+    assert len(steps_by_pid[PID_PLANNED]) == len(steps), doc
+    assert len(steps_by_pid[PID_MEASURED]) == len(steps), \
+        "measured track group missing — MeasuredReports not traced"
+
+    snap = obs.metrics.snapshot()
+    assert obs.metrics.counter_value("exec.stage_fills") == 0.0
+    assert any(k.startswith("exec.phase_wall_s{") for k in snap["gauges"])
+    assert snap["histograms"]["exec.measured_ratio"]["count"] == len(steps)
+    assert obs.drift.n_reports == len(steps)
+    assert obs.drift.n_unmatched == 0
+    try:
+        obs.drift.check()
+        raise AssertionError("host-device walls inside 7% of the model?!")
+    except DriftError as e:
+        assert "ewma" in str(e)
+    print(f"  flight recorder: planned+measured track groups, "
+          f"{len(snap['counters'])} counters, drift loud on host devices "
+          f"(worst cell |ewma| {max(abs(s.ewma) for s in obs.drift.cells.values()):.0f})")
+
+
 def test_shape_validation():
     # per-requester route shard mismatch names the shard and both shapes
     q = jnp.zeros((4, 2, 24))
@@ -283,5 +333,6 @@ if __name__ == "__main__":
     test_selection_scenario()
     test_fanout_group()
     test_dead_holder()
+    test_flight_recorder()
     test_shape_validation()
     print("SHARD-MAP-EXEC-OK")

@@ -1,0 +1,146 @@
+"""Trace export (ISSUE 9): determinism + schema validity of the Chrome
+trace-event / Perfetto JSON on all three golden traces and the selection
+trace, and the planned/measured track-group structure."""
+
+import dataclasses
+import json
+import pathlib
+
+from engine_scenarios import SCENARIOS, selection_scenario
+from repro.obs import Obs, Tracer
+from repro.obs.trace import (PID_ENGINE, PID_MEASURED, PID_PLANNED,
+                             validate_trace)
+from repro.serving import timeline as TL
+
+FIXTURE = pathlib.Path(__file__).parent / "fixtures" / "selection_trace.json"
+
+
+def _scenarios():
+    """The three golden builders + the frozen selection trace (replayed
+    through the numpy-only planner — no jax needed here)."""
+    out = dict(SCENARIOS)
+
+    def _selection():
+        from repro.serving.selection import ReplaySelector
+        return selection_scenario(selector=ReplaySelector(str(FIXTURE)))
+
+    out["selection"] = _selection
+    return out
+
+
+def _traced_run(build):
+    eng, steps = build()
+    obs = Obs(tracer=Tracer())
+    eng.obs = obs
+    obs.bind_engine(eng)
+    for reqs in steps:
+        eng.schedule_step(reqs)
+    return eng, obs.tracer.export()
+
+
+def _timeline_events(doc):
+    """Everything except the wall-clock pid (pid 0 carries perf_counter
+    times, legitimately different between two runs)."""
+    return [ev for ev in doc["traceEvents"] if ev["pid"] != PID_ENGINE]
+
+
+class TestTraceExport:
+    def test_schema_valid_on_all_traces(self):
+        for name, build in _scenarios().items():
+            _, doc = _traced_run(build)
+            assert validate_trace(doc) == [], name
+            # and it round-trips through JSON unchanged
+            assert json.loads(json.dumps(doc)) == doc, name
+
+    def test_deterministic_on_all_traces(self):
+        """Two fresh runs of the same frozen trace export byte-identical
+        timeline events (simulated times, stable tid allocation). Only
+        the wall-clock pid may differ."""
+        for name, build in _scenarios().items():
+            _, doc_a = _traced_run(build)
+            _, doc_b = _traced_run(build)
+            assert (json.dumps(_timeline_events(doc_a))
+                    == json.dumps(_timeline_events(doc_b))), name
+
+    def test_planned_track_group_structure(self):
+        _, doc = _traced_run(SCENARIOS["mixed_congested"])
+        events = doc["traceEvents"]
+        thread_names = {(e["pid"], e["args"]["name"]) for e in events
+                        if e["ph"] == "M" and e["name"] == "thread_name"}
+        planned_tracks = {n for p, n in thread_names if p == PID_PLANNED}
+        # one track per (link, fabric) and per holder SM
+        assert any(n.startswith("link i") for n in planned_tracks)
+        assert any(n.startswith("sm i") for n in planned_tracks)
+        # per-dispatch stage spans carry their flow + step
+        stage_evs = [e for e in events
+                     if e["ph"] == "X" and e["pid"] == PID_PLANNED
+                     and e.get("cat") not in ("step",)]
+        assert stage_evs
+        assert all("flow" in e["args"] and "step" in e["args"]
+                   for e in stage_evs)
+        stage_names = {e["name"] for e in stage_evs}
+        assert {"transfer", "compute"} <= stage_names
+        # engine wall spans: plan/execute/account per step
+        wall_names = [e["name"] for e in events
+                      if e["ph"] == "X" and e["pid"] == PID_ENGINE]
+        assert wall_names.count("plan") == 2       # mixed_congested: 2 steps
+        assert wall_names.count("execute") == 2
+        assert wall_names.count("account") == 2
+
+    def test_steps_tile_without_overlap(self):
+        _, doc = _traced_run(SCENARIOS["routed_only"])
+        markers = sorted(
+            (e for e in doc["traceEvents"]
+             if e["ph"] == "X" and e["pid"] == PID_PLANNED
+             and e.get("cat") == "step"),
+            key=lambda e: e["ts"])
+        assert len(markers) == 3
+        for a, b in zip(markers, markers[1:]):
+            assert a["ts"] + a["dur"] < b["ts"]
+
+    def test_measured_group_renders_from_report(self):
+        """A synthetic MeasuredReport (analytic flows, scaled walls)
+        renders as a parallel measured track group aligned on the same
+        step origin — the planned/measured visual comparison the tentpole
+        promises, exercised without a device mesh."""
+        eng, steps = SCENARIOS["routed_only"]()
+        tracer = Tracer()
+        for reqs in steps:
+            eng.schedule_step(reqs)
+            analytic = eng.timelines[-1]
+            measured_flows = [
+                dataclasses.replace(f, stages=tuple(
+                    dataclasses.replace(s, duration_s=s.duration_s * 40.0)
+                    for s in f.stages))
+                for f in analytic.flows]
+            report = TL.measured_vs_analytic(eng.step_idx, analytic,
+                                             measured_flows)
+            tracer.add_step(eng.step_idx, analytic, report.measured)
+        doc = tracer.export()
+        assert validate_trace(doc) == []
+        planned = [e for e in doc["traceEvents"]
+                   if e["ph"] == "X" and e["pid"] == PID_PLANNED
+                   and e.get("cat") == "step"]
+        measured = [e for e in doc["traceEvents"]
+                    if e["ph"] == "X" and e["pid"] == PID_MEASURED
+                    and e.get("cat") == "step"]
+        assert len(planned) == len(measured) == 3
+        for p, m in zip(sorted(planned, key=lambda e: e["ts"]),
+                        sorted(measured, key=lambda e: e["ts"])):
+            assert p["ts"] == m["ts"]              # shared step origin
+            assert m["dur"] > p["dur"]             # measured walls dominate
+
+    def test_export_writes_file(self, tmp_path):
+        _, doc = _traced_run(SCENARIOS["fetch_heavy"])
+        tracer = Tracer()
+        eng, steps = SCENARIOS["fetch_heavy"]()
+        obs = Obs(tracer=tracer)
+        eng.obs = obs
+        obs.bind_engine(eng)
+        for reqs in steps:
+            eng.schedule_step(reqs)
+        path = tmp_path / "trace.json"
+        tracer.export(str(path))
+        on_disk = json.loads(path.read_text())
+        assert validate_trace(on_disk) == []
+        assert (_timeline_events(on_disk) == _timeline_events(doc))
