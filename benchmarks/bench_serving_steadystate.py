@@ -393,10 +393,51 @@ def _exec_mode(fused: bool, repetitions: int) -> dict:
     }
 
 
+def _pipeline_mode(depth: int, repetitions: int) -> dict:
+    """ISSUE 10: `repetitions` fresh engines at one pipeline depth over
+    the frozen mixed_congested trace, ONE warm backend. Reports the step
+    wall and the planner-overlap attribution per rep (rep 0 cold — the
+    cold rep's dispatch wall is compile time, so only the warm rep's
+    hidden fraction is gate material)."""
+    import pathlib
+    import sys
+    import time
+    tests_dir = str(pathlib.Path(__file__).resolve().parent.parent / "tests")
+    if tests_dir not in sys.path:
+        sys.path.insert(0, tests_dir)
+    from engine_scenarios import SCENARIOS
+    from repro.serving.backends import ShardMapExecBackend
+    backend = ShardMapExecBackend()
+    rows = []
+    for _ in range(repetitions):
+        eng, steps = SCENARIOS["mixed_congested"](
+            backend, cfg=EngineConfig(pipeline_depth=depth))
+        t0 = time.perf_counter()
+        eng.run(iter(steps))
+        wall = time.perf_counter() - t0
+        # the first step's plan can never overlap (nothing is in flight
+        # yet): the hidden fraction is over the ELIGIBLE plan walls
+        eligible = sum(eng.plan_walls[1:])
+        rows.append({
+            "wall_ms": round(wall * 1e3, 3),
+            "wall_per_step_ms": round(wall / len(eng.stats) * 1e3, 3),
+            "plan_wall_ms": round(sum(eng.plan_walls) * 1e3, 3),
+            "eligible_plan_wall_ms": round(eligible * 1e3, 3),
+            "hidden_ms": round(eng.planner_overlap_s * 1e3, 3),
+            "hidden_frac": (round(eng.planner_overlap_s / eligible, 4)
+                            if eligible else 0.0),
+            "replans": eng.misspeculation_replans,
+        })
+    return {"depth": depth, "repetitions": repetitions,
+            "cold": rows[0], "warm": rows[-1],
+            "warm_hidden_frac": rows[-1]["hidden_frac"]}
+
+
 def exec_bench(out_path: str = "BENCH_exec.json",
                max_warm_ratio: float = 0.0,
                min_improvement: float = 0.0,
-               repetitions: int = 3) -> dict:
+               repetitions: int = 3,
+               min_hidden_frac: float = 0.0) -> dict:
     """ISSUE 8: the serial (PR-7 staged_call chain) and fused/overlapped
     execution paths side by side on the frozen mixed_congested trace over
     an 8-device mesh. The host-independent gate is `min_improvement`
@@ -413,6 +454,13 @@ def exec_bench(out_path: str = "BENCH_exec.json",
     fused = _exec_mode(fused=True, repetitions=repetitions)
     improvement = (serial["warm_ratio_p50"] / fused["warm_ratio_p50"]
                    if fused["warm_ratio_p50"] else float("inf"))
+    # ISSUE 10: the same trace lockstep vs pipelined. The gated number is
+    # the warm hidden FRACTION (planner wall demonstrably overlapped with
+    # the deferred barrier / eligible planner wall) — wall-time ratios on
+    # time-shared forced host devices are too noisy to gate, so the
+    # lockstep row is informational context
+    lockstep = _pipeline_mode(depth=1, repetitions=repetitions)
+    pipelined = _pipeline_mode(depth=2, repetitions=repetitions)
     payload = {
         "bench": "bench_serving_steadystate.exec_bench",
         "workload": "tests/engine_scenarios.mixed_congested (8 instances, "
@@ -421,11 +469,14 @@ def exec_bench(out_path: str = "BENCH_exec.json",
         "devices": len(jax.devices()),
         "serial": serial,
         "fused": fused,
-        # the number the tentpole is about: how much closer the fused +
-        # overlapped path gets measured wall to the analytic model
+        # the number the ISSUE 8 tentpole is about: how much closer the
+        # fused + overlapped path gets measured wall to the analytic model
         "warm_ratio_improvement": round(improvement, 2),
+        "lockstep": lockstep,
+        "pipelined": pipelined,
         "gates": {"max_warm_ratio": max_warm_ratio,
-                  "min_improvement": min_improvement},
+                  "min_improvement": min_improvement,
+                  "min_hidden_frac": min_hidden_frac},
     }
     if out_path:
         import pathlib
@@ -441,6 +492,13 @@ def exec_bench(out_path: str = "BENCH_exec.json",
             f"exec overlap regression: fused path only improves the warm "
             f"measured/analytic ratio x{improvement:.2f} over serial "
             f"(floor x{min_improvement:.2f})")
+    if min_hidden_frac \
+            and pipelined["warm_hidden_frac"] < min_hidden_frac:
+        raise SystemExit(
+            f"pipelining regression: warm depth-2 run hid only "
+            f"{pipelined['warm_hidden_frac']:.0%} of the eligible planner "
+            f"wall under the device barrier "
+            f"(floor {min_hidden_frac:.0%})")
     return payload
 
 
@@ -469,6 +527,11 @@ if __name__ == "__main__":
     ap.add_argument("--repetitions", type=int, default=3,
                     help="exec bench: engines per mode (rep 0 cold, "
                          "last warm)")
+    ap.add_argument("--min-hidden-frac", type=float, default=0.0,
+                    help="exec bench: fail if the warm depth-2 pipelined "
+                         "run hides less than this fraction of the "
+                         "eligible planner wall under the device barrier "
+                         "(ISSUE 10; 0 = off)")
     a = ap.parse_args()
     if a.planner_bench:
         print(json.dumps(planner_bench(a.out or "BENCH_planner.json",
@@ -477,7 +540,8 @@ if __name__ == "__main__":
     elif a.exec_bench:
         print(json.dumps(exec_bench(a.out or "BENCH_exec.json",
                                     a.max_warm_ratio, a.min_improvement,
-                                    a.repetitions), indent=1))
+                                    a.repetitions, a.min_hidden_frac),
+                         indent=1))
     else:
         print(json.dumps({"steadystate": simulate(),
                           "selection_regime": selection_regime()},

@@ -359,6 +359,14 @@ class ChunkStore:
             length[i] = c.length
         return ids, length, holders, chunks
 
+    def residency_snapshot(self):
+        """Canonical, order-independent view of where every chunk lives:
+        ``{chunk_id: (holder, sorted replica tuple, length)}``. Bit-
+        identity tests (pipelined vs lockstep, ISSUE 10) compare two
+        engines' snapshots after identical workloads."""
+        return {cid: (c.holder, tuple(sorted(c.replicas)), c.length)
+                for cid, c in self._chunks.items()}
+
     # -- agentic CoW forks (§1, §6.3) ---------------------------------------
 
     def fork(self, chunk_id: str, agent_instance: int) -> Fork:

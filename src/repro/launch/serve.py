@@ -77,6 +77,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="shard_map backend: run dispatch groups through "
                          "the PR-7 serial staged_call chain instead of the "
                          "fused/overlapped path (A/B debug knob, ISSUE 8)")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="steps in flight between submit and account "
+                         "(ISSUE 10): 1 = lockstep plan/execute/account "
+                         "(the kill switch), >= 2 plans step N+1 "
+                         "speculatively while step N's device work runs")
     ap.add_argument("--trace", default="",
                     help="replay a save_trace() JSON instead of generating")
     ap.add_argument("--save-trace", default="",
@@ -170,7 +175,8 @@ def build_engine(args) -> ServingEngine:
     return ServingEngine(
         args.instances, pool_tokens=args.pool_tokens,
         cfg=EngineConfig(intra_pod_fabric=args.intra_fabric,
-                         cross_pod_fabric=args.cross_fabric),
+                         cross_pod_fabric=args.cross_fabric,
+                         pipeline_depth=args.pipeline_depth),
         instances_per_pod=max(1, args.instances // args.pods),
         backend=backend, selector=build_selector(args),
         obs=build_obs(args))
@@ -239,23 +245,46 @@ def main(argv=None) -> None:
     eng = build_engine(args)
     steps = build_trace(args, eng, replay)
 
-    for reqs in steps:
-        recs = eng.schedule_step(reqs)
-        s = eng.stats[-1]
-        line = (f"[serve] step {s.step}: {len(recs)} dispatches "
-                f"{s.primitives}, {s.n_resident}/{s.n_pairs} resident, "
-                f"makespan {s.latency_s*1e6:.0f}us")
-        if eng.selector is not None:
-            line += f", {s.n_selected} selected pairs"
-        if args.verify:
-            from repro.serving.backends.jax_exec import max_oracle_err
-            line += f", max|err| {max_oracle_err(eng, reqs, s.step):.2e}"
-        print(line)
-        report = eng.measured_reports[-1]
-        if report is not None:
-            # the shard_map backend's measured-vs-analytic loop (§7)
-            print("\n".join("[serve]   " + ln
-                            for ln in report.summary().splitlines()))
+    # reporting trails accounting: at --pipeline-depth >= 2 a scheduled
+    # step may still be in flight when the loop moves on, so per-step
+    # lines print from the accounted prefix of eng.stats, not from the
+    # just-scheduled step (at depth 1 the cursor stays caught up and the
+    # output is identical to the historical lockstep loop)
+    reported = [0]
+
+    def report_accounted():
+        while reported[0] < len(eng.stats):
+            s = eng.stats[reported[0]]
+            reqs = steps[reported[0]]
+            recs = eng.plans[reported[0]].records
+            line = (f"[serve] step {s.step}: {len(recs)} dispatches "
+                    f"{s.primitives}, {s.n_resident}/{s.n_pairs} resident, "
+                    f"makespan {s.latency_s*1e6:.0f}us")
+            if eng.selector is not None:
+                line += f", {s.n_selected} selected pairs"
+            if args.verify:
+                from repro.serving.backends.jax_exec import max_oracle_err
+                line += f", max|err| {max_oracle_err(eng, reqs, s.step):.2e}"
+            print(line)
+            report = eng.measured_reports[reported[0]]
+            if report is not None:
+                # the shard_map backend's measured-vs-analytic loop (§7)
+                print("\n".join("[serve]   " + ln
+                                for ln in report.summary().splitlines()))
+            reported[0] += 1
+
+    depth = max(1, args.pipeline_depth)
+    for i, reqs in enumerate(steps):
+        eng.schedule_step(reqs)
+        if depth >= 2 and i + 1 < len(steps):
+            eng.speculate_step(steps[i + 1])
+        report_accounted()
+    eng.flush()
+    report_accounted()
+    if depth > 1:
+        print(f"[serve] pipeline: depth {depth}, planner overlap hidden "
+              f"{eng.planner_overlap_s*1e3:.2f}ms, "
+              f"{eng.misspeculation_replans} replans")
 
     if args.save_selection_trace:
         from repro.serving.selection import save_selection_trace

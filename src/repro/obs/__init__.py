@@ -43,8 +43,8 @@ class _NullObs:
     def bind_engine(self, engine) -> None:  # pragma: no cover - trivial
         pass
 
-    def on_step(self, engine, plan, execution, stats,
-                walls=None) -> None:  # pragma: no cover - trivial
+    def on_step(self, engine, plan, execution, stats, walls=None,
+                overlap_s=0.0, replans=0) -> None:  # pragma: no cover
         pass
 
 
@@ -90,10 +90,14 @@ class Obs:
 
     # -- the one per-step hook ------------------------------------------------
 
-    def on_step(self, engine, plan, execution, stats, walls=None) -> None:
+    def on_step(self, engine, plan, execution, stats, walls=None,
+                overlap_s=0.0, replans=0) -> None:
         """Fold one accounted step into every organ. Runs AFTER the step's
         sched_wall_s was measured, so even heavy exports here never show
-        up in planner-throughput numbers."""
+        up in planner-throughput numbers. ``overlap_s`` is the planner
+        wall this step demonstrably hid under the device barrier and
+        ``replans`` the engine's cumulative misspeculation count — both
+        zero outside pipelined mode (ISSUE 10)."""
         from repro.serving import timeline as TL
 
         m = self.metrics
@@ -116,6 +120,14 @@ class Obs:
                 stats.selection_fallbacks)
         m.histogram("engine.step_latency_s").observe(stats.latency_s)
         m.histogram("engine.sched_wall_s").observe(stats.sched_wall_s)
+
+        # -- pipeline (ISSUE 10) ----------------------------------------------
+        depth = max(1, getattr(engine.cfg, "pipeline_depth", 1))
+        m.gauge("engine.pipeline_depth").set(depth)
+        if depth > 1:
+            m.histogram("engine.planner_overlap_s").observe(overlap_s)
+            m.counter("engine.planner_overlap_s_total").inc(overlap_s)
+            m.gauge("engine.misspeculation_replans").set(replans)
 
         # -- engine: bytes by fabric/link + §8 congestion ---------------------
         # model-implied wire bytes: duration x fabric bandwidth for every
@@ -198,10 +210,19 @@ class Obs:
         if self.tracer is not None:
             if walls is not None:
                 t0, t1, t2, t3 = walls
-                self.tracer.wall_span("plan", t0, t1, step=stats.step)
-                self.tracer.wall_span("execute", t1, t2, step=stats.step,
+                # in-flight steps overlap in wall time; give each a lane
+                # (round-robin over depth) so Perfetto renders them as
+                # parallel pid-0 tracks instead of one impossible track.
+                # Depth 1 keeps the historical single "engine" track.
+                track = "engine" if depth <= 1 \
+                    else f"engine lane {(stats.step - 1) % depth}"
+                self.tracer.wall_span("plan", t0, t1, track=track,
+                                      step=stats.step)
+                self.tracer.wall_span("execute", t1, t2, track=track,
+                                      step=stats.step,
                                       backend=type(backend).__name__)
-                self.tracer.wall_span("account", t2, t3, step=stats.step)
+                self.tracer.wall_span("account", t2, t3, track=track,
+                                      step=stats.step)
             self.tracer.add_step(
                 stats.step, timeline,
                 report.measured if report is not None else None)

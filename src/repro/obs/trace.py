@@ -106,13 +106,16 @@ class Tracer:
     # -- engine wall spans ---------------------------------------------------
 
     def wall_span(self, name: str, t0: float, t1: float,
-                  **args: object) -> None:
-        """A real perf_counter span (plan/execute/account), on pid 0."""
+                  track: str = "engine", **args: object) -> None:
+        """A real perf_counter span (plan/execute/account), on pid 0.
+        ``track`` names the pid-0 thread lane — the pipelined engine
+        (ISSUE 10) rotates in-flight steps across lanes so overlapping
+        walls render side by side instead of on one impossible track."""
         if self._wall0 is None:
             self._wall0 = t0
         self.events.append({
             "ph": "X", "pid": PID_ENGINE,
-            "tid": self._tid(PID_ENGINE, "engine"),
+            "tid": self._tid(PID_ENGINE, track),
             "ts": (t0 - self._wall0) * 1e6,
             "dur": max(t1 - t0, 0.0) * 1e6,
             "name": name, "cat": "engine",

@@ -18,7 +18,7 @@ from __future__ import annotations
 from typing import TYPE_CHECKING
 
 from repro.serving import timeline as TL
-from repro.serving.backends.base import StepExecution
+from repro.serving.backends.base import StepExecution, StepTicket
 from repro.serving.plan import StepPlan, build_timeline
 
 if TYPE_CHECKING:                                    # pragma: no cover
@@ -35,3 +35,12 @@ class AnalyticBackend:
         else:
             timeline = build_timeline(plan.records)
         return StepExecution(timeline=timeline, backend=self.name)
+
+    # simulation has no device work to defer: submit IS execute (ISSUE 10)
+
+    def submit(self, engine: "ServingEngine", plan: StepPlan) -> StepTicket:
+        return StepTicket(plan=plan, execution=self.execute(engine, plan))
+
+    def await_result(self, engine: "ServingEngine",
+                     ticket: StepTicket) -> StepExecution:
+        return ticket.execution

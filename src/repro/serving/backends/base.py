@@ -4,6 +4,22 @@ A backend receives the engine (for topology + chunk store) and the step's
 StepPlan, and returns a StepExecution. It must NOT re-plan: primitives,
 batching, persistence and replica placement are already decided — the
 backend's job is to realize (or simulate) the planned transports.
+
+Since ISSUE 10 execution is split into two halves so the engine can
+pipeline plan(N+1) under execute(N):
+
+* ``submit(engine, plan) -> StepTicket`` — issue the step's device work
+  without blocking on it. A backend with nothing async to offer (the
+  analytic timeline, the in-process jax path) executes eagerly and
+  returns the finished StepExecution inside the ticket.
+* ``await_result(engine, ticket) -> StepExecution`` — block until the
+  submitted step completes and account its measured walls. Must be called
+  exactly once per ticket, in submit order (the engine drains FIFO).
+
+``execute`` remains the one-shot form (submit + await back to back) and
+the only method a minimal backend must provide — the ``submit_step`` /
+``await_step`` helpers below degrade to it, so third-party backends keep
+working unchanged at any pipeline depth (they just overlap nothing).
 """
 
 from __future__ import annotations
@@ -39,6 +55,18 @@ class StepExecution:
     measured: Optional[TL.MeasuredReport] = None
 
 
+@dataclasses.dataclass
+class StepTicket:
+    """An in-flight step: what submit() issued and await_result() will
+    finish. ``execution`` is pre-filled by eager backends (submit already
+    ran everything); ``state`` is backend-private launch context for the
+    genuinely async ones (the shard_map backend parks its dispatched
+    device tasks here until the barrier)."""
+    plan: StepPlan
+    state: Any = None
+    execution: Optional[StepExecution] = None
+
+
 @runtime_checkable
 class ExecutionBackend(Protocol):
     name: str
@@ -47,3 +75,22 @@ class ExecutionBackend(Protocol):
                 plan: StepPlan) -> StepExecution:
         """Run (or simulate) one planned step."""
         ...                                          # pragma: no cover
+
+
+def submit_step(backend: ExecutionBackend, engine: "ServingEngine",
+                plan: StepPlan) -> StepTicket:
+    """Issue one planned step without blocking. Backends that predate the
+    split (no submit attr) run eagerly — correct at any depth, they just
+    leave nothing for the planner to hide under."""
+    sub = getattr(backend, "submit", None)
+    if sub is None:
+        return StepTicket(plan=plan, execution=backend.execute(engine, plan))
+    return sub(engine, plan)
+
+
+def await_step(backend: ExecutionBackend, engine: "ServingEngine",
+               ticket: StepTicket) -> StepExecution:
+    """Block until a submitted step's StepExecution is complete."""
+    if ticket.execution is not None:
+        return ticket.execution
+    return backend.await_result(engine, ticket)

@@ -55,7 +55,7 @@ from repro.core.merge import Partial, merge_tree
 from repro.core.routing import route_batched
 from repro.core.splice import splice_delta_rotate
 from repro.models.mla import MLAConfig, absorbed_partial
-from repro.serving.backends.base import StepExecution
+from repro.serving.backends.base import StepExecution, StepTicket
 from repro.serving.plan import Request, StepPlan, build_timeline
 
 if TYPE_CHECKING:                                    # pragma: no cover
@@ -272,6 +272,17 @@ class JaxExecBackend:
         outputs = {rid: merge_tree(ps) for rid, ps in parts.items()}
         return StepExecution(timeline=build_timeline(plan.records),
                              outputs=outputs, backend=self.name)
+
+    # single-process execution blocks as it goes — there is no deferred
+    # device barrier to move, so submit runs the step eagerly (ISSUE 10;
+    # the shard_map subclass overrides both halves with a real split)
+
+    def submit(self, engine: "ServingEngine", plan: StepPlan) -> StepTicket:
+        return StepTicket(plan=plan, execution=self.execute(engine, plan))
+
+    def await_result(self, engine: "ServingEngine",
+                     ticket: StepTicket) -> StepExecution:
+        return ticket.execution
 
     def _exec_route(self, store: ChunkStore, rec, q_of, parts,
                     mask_of) -> None:

@@ -70,7 +70,7 @@ from repro.core.splice import (fetch_chunk, fetch_scattered_gather,
                                splice_delta_rotate)
 from repro.models.mla import MLAConfig, absorbed_partial
 from repro.serving import timeline as TL
-from repro.serving.backends.base import StepExecution
+from repro.serving.backends.base import StepExecution, StepTicket
 from repro.serving.backends.jax_exec import (JaxExecBackend, TINY_MLA,
                                              fetch_source)
 from repro.serving.plan import StepPlan, build_timeline
@@ -356,12 +356,31 @@ class ShardMapExecBackend(JaxExecBackend):
 
     def execute(self, engine: "ServingEngine",
                 plan: StepPlan) -> StepExecution:
+        return self.await_result(engine, self.submit(engine, plan))
+
+    def submit(self, engine: "ServingEngine", plan: StepPlan) -> StepTicket:
+        """Issue the step WITHOUT blocking (ISSUE 10): bind, STACK the
+        batched device_put, DISPATCH every fused program — everything of
+        _execute_overlapped up to (not including) the barrier. The engine
+        plans the next step while the devices chew; await_result barriers
+        and merges. The serial chain has no deferrable barrier (each
+        staged_call blocks), so fused=False stays eager — the A/B oracle
+        is a ticket whose execution is already complete."""
         t_wall0 = time.perf_counter()
         self._bind(engine)
-        self._fill_count = 0
-        if self.fused:
-            return self._execute_overlapped(engine, plan, t_wall0)
-        return self._execute_serial(engine, plan, t_wall0)
+        if not self.fused:
+            self._fill_count = 0
+            return StepTicket(plan=plan, execution=self._execute_serial(
+                engine, plan, t_wall0))
+        return StepTicket(plan=plan,
+                          state=self._submit_overlapped(engine, plan,
+                                                        t_wall0))
+
+    def await_result(self, engine: "ServingEngine",
+                     ticket: StepTicket) -> StepExecution:
+        if ticket.execution is not None:
+            return ticket.execution
+        return self._await_overlapped(engine, ticket.plan, ticket.state)
 
     def _analytic_timeline(self, plan: StepPlan):
         """EXACTLY what AnalyticBackend produces, so StepStats derived
@@ -797,8 +816,15 @@ class ShardMapExecBackend(JaxExecBackend):
             (rec.primitive, rec.chunk_id, set(names) ^ set(meas))
         return meas
 
-    def _execute_overlapped(self, engine: "ServingEngine", plan: StepPlan,
-                            t_wall0: float) -> StepExecution:
+    def _submit_overlapped(self, engine: "ServingEngine", plan: StepPlan,
+                           t_wall0: float) -> dict:
+        """STACK + DISPATCH of the fused path (ISSUE 8), detached from the
+        barrier (ISSUE 10): returns the launch context _await_overlapped
+        finishes. Everything here reads only plan-time state — residency
+        was committed by plan_step, replica BYTES a prior in-flight step
+        has not persisted yet resolve to canonical bytes via _array_on
+        (identical content under delta-0 replication), so a submit issued
+        before the previous step's merge is value-equivalent."""
         store = engine.store
         reqs = {rq.req_id: rq for rq in plan.requests}
         sels = plan.selections
@@ -853,6 +879,18 @@ class ShardMapExecBackend(JaxExecBackend):
             t_launch, out = launch(bufs)
             tasks.append([i, rec, out, post, t_launch, 0.0])
         t_dispatch = time.perf_counter() - t0
+        return {"parts": parts, "tasks": tasks, "t_wall0": t_wall0,
+                "t_stack": t_stack, "t_dispatch": t_dispatch}
+
+    def _await_overlapped(self, engine: "ServingEngine", plan: StepPlan,
+                          state: dict) -> StepExecution:
+        parts, tasks = state["parts"], state["tasks"]
+        t_wall0 = state["t_wall0"]
+        # per-step fill counter: fills only ever happen in the merge phase
+        # (_apportion/_measured_flow), and the engine drains tickets FIFO
+        # in a single thread, so resetting here keeps _report per-step
+        # accurate even with several submits in flight
+        self._fill_count = 0
 
         # -- BARRIER: block once per step, in launch order -------------------
         t0 = time.perf_counter()
@@ -884,7 +922,8 @@ class ShardMapExecBackend(JaxExecBackend):
         analytic = self._analytic_timeline(plan)
         report = self._report(plan, analytic, measured_flows, t_wall0,
                               "fused")
-        self.phase_wall = {"stack": t_stack, "dispatch": t_dispatch,
+        self.phase_wall = {"stack": state["t_stack"],
+                           "dispatch": state["t_dispatch"],
                            "barrier": t_barrier,
                            "merge": time.perf_counter() - t0}
         for k, v in self.phase_wall.items():

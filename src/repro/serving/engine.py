@@ -35,6 +35,7 @@ reports p50/p99 step latency and scheduler decisions/sec from.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 import warnings
 from collections import defaultdict
@@ -48,7 +49,8 @@ from repro.core import predicate as P
 from repro.core.chunk_store import ChunkStore
 from repro.core.constants import Fabric
 from repro.serving import timeline as TL
-from repro.serving.backends.base import ExecutionBackend, StepExecution
+from repro.serving.backends.base import (ExecutionBackend, StepExecution,
+                                         StepTicket, await_step, submit_step)
 # Plan-layer types live in repro.serving.plan; re-exported here so the
 # historical `from repro.serving.engine import ...` imports keep working.
 from repro.serving.plan import (DispatchRecord, Request, ResidentPair,
@@ -105,6 +107,12 @@ class EngineConfig:
     # real arrays; keeping every step would grow memory linearly over a
     # run). < 0 keeps everything.
     retain_outputs: int = 8
+    # ISSUE 10: max steps in flight between submit and account. 1 = the
+    # historical lockstep plan->execute->account loop (the bit-identical
+    # A/B oracle and the kill switch); >= 2 lets the engine plan step N+1
+    # while step N's device work runs, hiding the planner wall under the
+    # backend's deferred barrier.
+    pipeline_depth: int = 1
 
 
 # one resolved (request, chunk) access, pre-decision
@@ -116,6 +124,40 @@ class _Pair:
     fabric_idx: int
     c_t: int
     n_holders: int
+
+
+# ISSUE 10: one submitted-but-not-accounted step in the engine's pipeline
+@dataclasses.dataclass
+class _InFlight:
+    plan: StepPlan
+    ticket: StepTicket
+    t_plan0: float
+    t_plan1: float
+    t_submit1: float
+    plan_wall_s: float
+    # planner wall that ran between this step's submit and its await —
+    # the wall the pipeline is trying to hide under the device barrier
+    overlap_candidate_s: float = 0.0
+
+
+# ISSUE 10: a plan produced ahead of its schedule_step call. Residency
+# changes are plan-determined (plan_step commits promotions/evictions
+# before execute runs), so a speculative plan advanced from the previous
+# plan's own deltas is exact unless the world mutates in between — the
+# epoch captures exactly the inputs a mutation would change.
+@dataclasses.dataclass
+class _Speculative:
+    requests: List[Request]
+    plan: StepPlan
+    epoch: tuple
+    plan_wall_s: float
+    t_plan0: float
+    t_plan1: float
+
+
+# an await that returns faster than this never actually blocked on the
+# device — treat the step as having hidden nothing (eager backends)
+_AWAIT_BLOCK_EPS_S = 5e-5
 
 
 class ServingEngine:
@@ -183,6 +225,17 @@ class ServingEngine:
         self._n_dec_hit = 0
         self._n_dec_miss = 0
         self._n_obj_fallback = 0
+        # ISSUE 10 pipeline state: FIFO of submitted-not-yet-accounted
+        # steps (at most pipeline_depth - 1 after schedule_step returns),
+        # plus at most one speculative plan for the step after that.
+        self._inflight: List[_InFlight] = []
+        self._spec: Optional[_Speculative] = None
+        self.misspeculation_replans = 0
+        # planner seconds that demonstrably ran under a blocked device
+        # barrier (the pipelining win, published through obs)
+        self.planner_overlap_s = 0.0
+        # per accounted step, the wall plan_step took (speculative or not)
+        self.plan_walls: List[float] = []
         # the flight recorder (ISSUE 9): NULL_OBS is an inert singleton —
         # the step path pays one identity comparison when observability is
         # off. A live Obs gets every accounted step via obs.on_step.
@@ -1414,22 +1467,136 @@ class ServingEngine:
     # -- PLAN -> EXECUTE -> ACCOUNT --------------------------------------------
 
     def schedule_step(self, requests: List[Request]) -> List[DispatchRecord]:
-        """One decode step end-to-end: plan the transports, execute them on
-        the configured backend, account the StepStats. Returns the planned
-        records (the engine's historical contract)."""
-        obs = self.obs
-        t_wall0 = time.perf_counter()
+        """One decode step: plan the transports (or claim a speculative
+        plan, see speculate_step), submit them to the backend, and drain
+        completed steps down to cfg.pipeline_depth - 1 in flight. At
+        depth 1 (the default) the step is accounted before this returns —
+        the historical lockstep plan->execute->account loop, bit-for-bit.
+        Returns the planned records (the engine's historical contract)."""
+        depth = max(1, self.cfg.pipeline_depth)
+        t_plan0 = time.perf_counter()
+        spec = self._claim_speculative(requests)
+        if spec is not None:
+            plan = spec.plan
+            t_plan0, t_plan1 = spec.t_plan0, spec.t_plan1
+            plan_wall = spec.plan_wall_s
+        else:
+            plan = self.plan_step(requests)
+            t_plan1 = time.perf_counter()
+            plan_wall = t_plan1 - t_plan0
+            if self._inflight:
+                # this plan ran while the oldest submitted step's device
+                # work was still un-awaited: it is overlap if that step's
+                # await turns out to actually block
+                self._inflight[0].overlap_candidate_s += plan_wall
+        ticket = submit_step(self.backend, self, plan)
+        t_submit1 = time.perf_counter()
+        self._inflight.append(_InFlight(
+            plan=plan, ticket=ticket, t_plan0=t_plan0, t_plan1=t_plan1,
+            t_submit1=t_submit1, plan_wall_s=plan_wall))
+        while len(self._inflight) > depth - 1:
+            self._drain_one()
+        return plan.records
+
+    def speculate_step(self, requests: List[Request]) -> None:
+        """Plan the NEXT step now, while submitted device work is in
+        flight. plan_step commits its own promotion/eviction deltas, so
+        the plan produced here is exactly the plan schedule_step would
+        have produced later — unless the world mutates first, in which
+        case _claim_speculative discards it and replans (counted in
+        misspeculation_replans). No-op at depth 1 or when a speculative
+        plan is already parked."""
+        if max(1, self.cfg.pipeline_depth) < 2 or self._spec is not None:
+            return
+        t0 = time.perf_counter()
         plan = self.plan_step(requests)
-        t_plan = time.perf_counter()
-        execution = self.backend.execute(self, plan)
-        t_exec = time.perf_counter()
-        self._account(plan, execution, t_exec - t_wall0)
+        t1 = time.perf_counter()
+        if self._inflight:
+            self._inflight[0].overlap_candidate_s += t1 - t0
+        self._spec = _Speculative(
+            requests=list(requests), plan=plan, epoch=self._world_epoch(),
+            plan_wall_s=t1 - t0, t_plan0=t0, t_plan1=t1)
+
+    def _world_epoch(self) -> tuple:
+        """Everything a between-steps mutation can change that planning
+        reads: residency structure (store.version — set_replica_data
+        deliberately does NOT bump it, so in-flight byte persistence
+        can't fault a speculation), liveness, and straggler factors."""
+        return (self.store.version,
+                tuple(i.alive for i in self.instances),
+                tuple(i.slowdown for i in self.instances))
+
+    def _claim_speculative(self,
+                           requests: List[Request]) -> Optional[_Speculative]:
+        """Return the parked speculative plan iff it matches this call's
+        requests and the world has not mutated since it was planned;
+        otherwise discard it, rewind step_idx, and count the replan. The
+        discarded plan's residency commits are NOT rolled back: promoted
+        replicas are delta-0 (content-identical to canonical), so a
+        superseding replan against the post-speculation mirror prices the
+        same bytes and the chosen plan's outputs stay §3.3-exact — the
+        replan simply re-decides against what is actually resident."""
+        spec, self._spec = self._spec, None
+        if spec is None:
+            return None
+        if spec.epoch == self._world_epoch() \
+                and spec.requests == list(requests):
+            return spec
+        self.misspeculation_replans += 1
+        self.step_idx = spec.plan.step - 1
+        return None
+
+    def _invalidate_speculation(self) -> bool:
+        """Drop the parked speculative plan (mutation incoming). The next
+        schedule_step replans from scratch against the mutated world."""
+        spec, self._spec = self._spec, None
+        if spec is None:
+            return False
+        self.misspeculation_replans += 1
+        self.step_idx = spec.plan.step - 1
+        return True
+
+    def _drain_one(self) -> None:
+        """Await + account the oldest in-flight step (FIFO — submit
+        order, which the backends require)."""
+        entry = self._inflight.pop(0)
+        t_await0 = time.perf_counter()
+        execution = await_step(self.backend, self, entry.ticket)
+        t_await1 = time.perf_counter()
+        await_wall = t_await1 - t_await0
+        # the await blocked => the device was busy from submit straight
+        # through it, so every planner second that ran in between was
+        # fully hidden; an instant return means there was nothing to hide
+        # under (eager backend, or the device finished long ago)
+        hidden = entry.overlap_candidate_s \
+            if (entry.overlap_candidate_s > 0.0
+                and await_wall > _AWAIT_BLOCK_EPS_S) else 0.0
+        self.planner_overlap_s += hidden
+        wall = entry.plan_wall_s + (entry.t_submit1 - entry.t_plan1) \
+            + await_wall
+        self._account(entry.plan, execution, wall)
+        self.plan_walls.append(entry.plan_wall_s)
+        obs = self.obs
         if obs.enabled:
             # everything observability-heavy happens HERE — after
             # sched_wall_s was measured, outside the planner wall
-            obs.on_step(self, plan, execution, self.stats[-1],
-                        (t_wall0, t_plan, t_exec, time.perf_counter()))
-        return plan.records
+            obs.on_step(self, entry.plan, execution, self.stats[-1],
+                        (entry.t_plan0, entry.t_plan1, t_await1,
+                         time.perf_counter()),
+                        overlap_s=hidden,
+                        replans=self.misspeculation_replans)
+            if self._spec is not None and obs.drift is not None \
+                    and obs.drift.tripped():
+                # a drift trip between plan and account invalidates the
+                # speculative plan exactly like an explicit mutation
+                self._invalidate_speculation()
+
+    def flush(self) -> None:
+        """Drain every in-flight step (await + account). Call after the
+        last schedule_step of a pipelined run — run() does. Leaves any
+        speculative plan parked for the next schedule_step."""
+        while self._inflight:
+            self._drain_one()
 
     def planner_cache_stats(self) -> Dict[str, int]:
         """Cumulative planner-cache effectiveness counters (ISSUE 9):
@@ -1492,12 +1659,31 @@ class ServingEngine:
             max_steps: Optional[int] = None) -> List[StepStats]:
         """Drive the scheduler over a trace (an iterable of per-step request
         lists, e.g. repro.serving.workload.agentic_trace). Returns the
-        StepStats of the steps executed this call."""
+        StepStats of the steps executed this call.
+
+        islice bounds the pull count exactly: a generator-backed trace is
+        never advanced past max_steps items (the old loop peeked one
+        extra element before breaking). At pipeline_depth >= 2 each
+        scheduled step's successor is planned speculatively while the
+        step's device work is in flight, and the pipeline is flushed
+        before returning — the trace is still pulled one item at a time,
+        after the previous step was scheduled, so generator side effects
+        interleave exactly as they do at depth 1."""
         start = len(self.stats)
-        for i, step_requests in enumerate(trace):
-            if max_steps is not None and i >= max_steps:
-                break
-            self.schedule_step(step_requests)
+        it = iter(trace) if max_steps is None \
+            else itertools.islice(trace, max_steps)
+        if max(1, self.cfg.pipeline_depth) < 2:
+            for step_requests in it:
+                self.schedule_step(step_requests)
+            return self.stats[start:]
+        sentinel = object()
+        pending = next(it, sentinel)
+        while pending is not sentinel:
+            self.schedule_step(pending)
+            pending = next(it, sentinel)
+            if pending is not sentinel:
+                self.speculate_step(pending)
+        self.flush()
         return self.stats[start:]
 
     # -- internals -------------------------------------------------------------
@@ -1565,10 +1751,18 @@ class ServingEngine:
     # -- faults ---------------------------------------------------------------
 
     def fail_instance(self, idx: int) -> List[str]:
+        # a mid-pipeline fault invalidates any speculative plan (it was
+        # planned against the pre-fault world) and drains in-flight steps
+        # — their plans predate the fault, and the store mutation below
+        # must not race their merge. Both are no-ops at depth 1.
+        self._invalidate_speculation()
+        self.flush()
         self.instances[idx].alive = False
         return self.store.drop_holder(idx)
 
     def set_straggler(self, idx: int, slowdown: float):
+        self._invalidate_speculation()
+        self.flush()
         self.instances[idx].slowdown = slowdown
 
     # -- metrics ---------------------------------------------------------------

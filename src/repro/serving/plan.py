@@ -153,6 +153,16 @@ class StepStats:
     n_selected: int = 0
     selection_fallbacks: int = 0
 
+    def comparable(self) -> Dict[str, object]:
+        """Everything deterministic about the step: the full dataclass
+        minus sched_wall_s (host wall clock — the one field that may
+        legitimately differ between two runs of the same plan). A/B
+        identity checks (pipelined vs lockstep, obs on vs off) compare
+        this dict."""
+        d = dataclasses.asdict(self)
+        d.pop("sched_wall_s")
+        return d
+
     @property
     def decisions_per_sec(self) -> float:
         """Predicate evaluations per wall-clock second (resident pairs skip

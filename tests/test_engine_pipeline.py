@@ -1,0 +1,389 @@
+"""Pipelined plan/execute (ISSUE 10): depth semantics, bit-identity
+against the lockstep oracle, speculation invalidation, and the run()
+iterator fix.
+
+The engine's contract is that pipeline_depth is a LATENCY knob, never a
+behavior knob: StepStats (minus host wall clock), DispatchRecords and
+final residency must be bit-identical at every depth on every workload.
+The depth {1,2,4} sweeps here enforce that on the frozen scenarios, the
+selection trace, the generated agentic workload, and (under hypothesis)
+randomized workload configurations.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from engine_scenarios import SCENARIOS, selection_scenario
+from repro.serving.backends import AnalyticBackend, JaxExecBackend, TINY_MLA
+from repro.serving.backends.base import StepTicket, await_step, submit_step
+from repro.serving.backends.jax_exec import oracle_partial
+from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.serving.selection import IndexerService
+from repro.serving.workload import (WorkloadConfig, agentic_trace,
+                                    materialize_trace, register_corpus)
+
+DEPTHS = (1, 2, 4)
+RTOL, ATOL = 2e-5, 1e-6
+
+
+def _record_key(r):
+    return (r.step, r.primitive, r.chunk_id, r.holder, r.n_requesters,
+            r.m_q_total, r.backup, r.fabric_idx, r.link_instance, r.home,
+            r.req_ids, r.est_cost_s, r.stages)
+
+
+def _run_at_depth(build, depth, backend=None, selector=None):
+    kw = {"cfg": EngineConfig(pipeline_depth=depth)}
+    if selector is not None:
+        kw["selector"] = selector
+    eng, steps = build(backend, **kw) if backend is not None \
+        else build(**kw)
+    eng.run(iter(steps))
+    return eng
+
+
+def _assert_engines_identical(a, b, ctx=""):
+    assert len(a.stats) == len(b.stats), ctx
+    for sa, sb in zip(a.stats, b.stats):
+        assert sa.comparable() == sb.comparable(), (ctx, sa.step)
+    assert [_record_key(r) for r in a.log] \
+        == [_record_key(r) for r in b.log], ctx
+    assert a.store.residency_snapshot() == b.store.residency_snapshot(), ctx
+
+
+# ---------------------------------------------------------------------------
+# run() iterator contract (satellite: the max_steps off-by-one).
+# ---------------------------------------------------------------------------
+
+class TestRunIterator:
+    @pytest.mark.parametrize("depth", DEPTHS)
+    def test_max_steps_pulls_exactly_max_steps_items(self, depth):
+        """The old loop pulled item i == max_steps from the trace before
+        breaking — fatal for generator-backed traces whose production has
+        side effects (or blocks). islice caps the pulls exactly."""
+        eng = ServingEngine(4, pool_tokens=10**6,
+                            cfg=EngineConfig(pipeline_depth=depth))
+        eng.register_chunk("c0", holder=1, length=256)
+        pulled = []
+
+        def trace():
+            for i in range(10):
+                pulled.append(i)
+                yield [Request(0, home=0, chunk_ids=["c0"], m_q=8)]
+
+        stats = eng.run(trace(), max_steps=2)
+        assert len(stats) == 2
+        assert pulled == [0, 1]
+
+    def test_unbounded_run_consumes_whole_trace(self):
+        eng = ServingEngine(4, pool_tokens=10**6)
+        eng.register_chunk("c0", holder=1, length=256)
+        reqs = [Request(0, home=0, chunk_ids=["c0"], m_q=8)]
+        assert len(eng.run(iter([reqs] * 3))) == 3
+
+    @pytest.mark.parametrize("depth", (2, 4))
+    def test_pipelined_run_flushes(self, depth):
+        """run() returns with nothing left in flight — stats cover every
+        scheduled step even when the last ones were pipelined."""
+        eng = ServingEngine(4, pool_tokens=10**6,
+                            cfg=EngineConfig(pipeline_depth=depth))
+        eng.register_chunk("c0", holder=1, length=256)
+        reqs = [Request(0, home=0, chunk_ids=["c0"], m_q=8)]
+        stats = eng.run(iter([reqs] * 5))
+        assert len(stats) == 5
+        assert eng._inflight == []
+
+
+# ---------------------------------------------------------------------------
+# Depth is a latency knob: bit-identity against the lockstep oracle.
+# ---------------------------------------------------------------------------
+
+class TestDepthBitIdentity:
+    @pytest.mark.parametrize("name", sorted(SCENARIOS))
+    @pytest.mark.parametrize("depth", (2, 4))
+    def test_scenarios_match_lockstep(self, name, depth):
+        base = _run_at_depth(SCENARIOS[name], 1)
+        pipe = _run_at_depth(SCENARIOS[name], depth)
+        _assert_engines_identical(base, pipe, (name, depth))
+
+    @pytest.mark.parametrize("depth", (2, 4))
+    def test_selection_trace_matches_lockstep(self, depth):
+        base = _run_at_depth(selection_scenario, 1,
+                             selector=IndexerService())
+        pipe = _run_at_depth(selection_scenario, depth,
+                             selector=IndexerService())
+        _assert_engines_identical(base, pipe, depth)
+
+    @pytest.mark.parametrize("depth", (2, 4))
+    def test_schedule_step_plus_flush_matches_run(self, depth):
+        """Driving the pipeline by hand (schedule_step per step, flush at
+        the end, no speculation) accounts the same steps as run()."""
+        base = _run_at_depth(SCENARIOS["mixed_congested"], 1)
+        eng, steps = SCENARIOS["mixed_congested"](
+            cfg=EngineConfig(pipeline_depth=depth))
+        for reqs in steps:
+            eng.schedule_step(reqs)
+        eng.flush()
+        _assert_engines_identical(base, eng, depth)
+
+    @pytest.mark.parametrize("depth", (2, 4))
+    def test_agentic_workload_matches_lockstep(self, depth):
+        wl = WorkloadConfig(n_steps=10, agents=8, n_corpus_chunks=6,
+                            chunk_tokens=256, session_steps=(2, 6),
+                            selection_frac=0.0, seed=3)
+
+        def build(depth_):
+            eng = ServingEngine(4, pool_tokens=32 * 256,
+                                cfg=EngineConfig(pipeline_depth=depth_),
+                                instances_per_pod=2)
+            cids = register_corpus(eng, wl)
+            return eng, materialize_trace(agentic_trace(wl, eng, cids))
+
+        base, steps_b = build(1)
+        base.run(iter(steps_b))
+        pipe, steps_p = build(depth)
+        assert [[dataclasses.asdict(r) for r in s] for s in steps_b] \
+            == [[dataclasses.asdict(r) for r in s] for s in steps_p]
+        pipe.run(iter(steps_p))
+        _assert_engines_identical(base, pipe, depth)
+        # the fault-free agentic run never misspeculates: every
+        # speculative plan is claimed as-is
+        assert pipe.misspeculation_replans == 0
+
+
+# ---------------------------------------------------------------------------
+# Randomized workloads (hypothesis, dev-only).
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # pragma: no cover - dev-only dep
+    st = None
+
+if st is not None:
+    @given(seed=st.integers(0, 2**16), agents=st.integers(1, 8),
+           n_chunks=st.integers(2, 8), depth=st.sampled_from((2, 3, 4)))
+    @settings(max_examples=25, deadline=None)
+    def test_randomized_workloads_match_lockstep(seed, agents, n_chunks,
+                                                 depth):
+        wl = WorkloadConfig(n_steps=6, agents=agents,
+                            n_corpus_chunks=n_chunks, chunk_tokens=256,
+                            session_steps=(1, 4), selection_frac=0.0,
+                            seed=seed)
+
+        def build(depth_):
+            eng = ServingEngine(4, pool_tokens=24 * 256,
+                                cfg=EngineConfig(pipeline_depth=depth_),
+                                instances_per_pod=2)
+            cids = register_corpus(eng, wl)
+            return eng, materialize_trace(agentic_trace(wl, eng, cids))
+
+        base, steps_b = build(1)
+        base.run(iter(steps_b))
+        pipe, steps_p = build(depth)
+        pipe.run(iter(steps_p))
+        _assert_engines_identical(base, pipe, (seed, agents, depth))
+else:
+    @pytest.mark.skip(
+        reason="property tests need hypothesis (requirements-dev.txt)")
+    def test_randomized_workloads_match_lockstep():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Speculation lifecycle: claim, misspeculation, mutation invalidation.
+# ---------------------------------------------------------------------------
+
+class TestSpeculation:
+    def _engine(self, depth=2, backend=None):
+        eng = ServingEngine(4, pool_tokens=10**6,
+                            cfg=EngineConfig(pipeline_depth=depth),
+                            backend=backend)
+        for i in range(3):
+            eng.register_chunk(f"c{i}", holder=1 + i % 3, length=256)
+        return eng
+
+    def test_speculative_plan_claimed_when_world_unchanged(self):
+        eng = self._engine()
+        r1 = [Request(0, home=0, chunk_ids=["c0"], m_q=8)]
+        r2 = [Request(1, home=0, chunk_ids=["c1"], m_q=8)]
+        eng.schedule_step(r1)
+        eng.speculate_step(r2)
+        assert eng._spec is not None
+        spec_plan = eng._spec.plan
+        eng.schedule_step(r2)
+        eng.flush()
+        assert eng.misspeculation_replans == 0
+        assert eng.plans[-1] is spec_plan
+
+    def test_request_mismatch_triggers_replan(self):
+        eng = self._engine()
+        r1 = [Request(0, home=0, chunk_ids=["c0"], m_q=8)]
+        eng.schedule_step(r1)
+        eng.speculate_step([Request(1, home=0, chunk_ids=["c1"], m_q=8)])
+        other = [Request(2, home=0, chunk_ids=["c2"], m_q=8)]
+        eng.schedule_step(other)
+        eng.flush()
+        assert eng.misspeculation_replans == 1
+        # the replan re-planned at the speculated step index, not past it
+        assert [s.step for s in eng.stats] == [1, 2]
+
+    def test_fail_instance_invalidates_and_flushes(self):
+        eng = self._engine()
+        r1 = [Request(0, home=0, chunk_ids=["c0"], m_q=8)]
+        r2 = [Request(1, home=0, chunk_ids=["c1"], m_q=8)]
+        eng.schedule_step(r1)
+        eng.speculate_step(r2)
+        assert eng._inflight          # step 1 still in flight at depth 2
+        eng.fail_instance(2)
+        assert eng._inflight == []    # drained before the store mutated
+        assert eng._spec is None
+        assert eng.misspeculation_replans == 1
+        eng.schedule_step(r2)
+        eng.flush()
+        assert [s.step for s in eng.stats] == [1, 2]
+
+    def test_set_straggler_invalidates_speculation(self):
+        eng = self._engine()
+        r1 = [Request(0, home=0, chunk_ids=["c0"], m_q=8)]
+        eng.schedule_step(r1)
+        eng.speculate_step([Request(1, home=0, chunk_ids=["c1"], m_q=8)])
+        eng.set_straggler(1, 2.5)
+        assert eng._spec is None
+        assert eng._inflight == []
+        assert eng.misspeculation_replans == 1
+
+    def test_depth1_fault_path_unchanged(self):
+        """At depth 1 the fault hooks are no-ops (nothing in flight, no
+        speculation) — lockstep fault behavior is untouched."""
+        eng = self._engine(depth=1)
+        eng.schedule_step([Request(0, home=0, chunk_ids=["c0"], m_q=8)])
+        eng.fail_instance(1)
+        assert eng.misspeculation_replans == 0
+
+    def test_failover_mid_pipeline_matches_oracle(self):
+        """The tentpole fault drill: speculate step 2, kill the holder
+        mid-pipeline, replan — the replanned step's outputs must still
+        match the single-instance oracle on the post-fault store."""
+        eng = self._engine(backend=JaxExecBackend())
+        r1 = [Request(0, home=0, chunk_ids=["c0"], m_q=4)]
+        r2 = [Request(1, home=0, chunk_ids=["c1"], m_q=4)]
+        eng.schedule_step(r1)
+        eng.speculate_step(r2)
+        eng.fail_instance(2)          # c1's holder dies under speculation
+        eng.schedule_step(r2)
+        eng.flush()
+        assert eng.misspeculation_replans == 1
+        assert [r.primitive for r in eng.plans[-1].records] == ["local"]
+        for step, reqs in ((1, r1), (2, r2)):
+            outs = eng.outputs_of(step)
+            for rq in reqs:
+                want = oracle_partial(TINY_MLA, eng.store, rq, step)
+                got = outs[rq.req_id]
+                np.testing.assert_allclose(got.o, want.o,
+                                           rtol=RTOL, atol=ATOL)
+                np.testing.assert_allclose(got.l, want.l,
+                                           rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# The submit/await split: compat shim + exec-backend pipelining.
+# ---------------------------------------------------------------------------
+
+class TestSubmitAwaitProtocol:
+    def test_legacy_backend_degrades_to_eager(self):
+        """A backend with only execute() (the pre-split protocol) still
+        works at any depth — submit_step wraps it eagerly."""
+        class Legacy:
+            name = "legacy"
+
+            def execute(self, engine, plan):
+                from repro.serving.backends.analytic import AnalyticBackend
+                return AnalyticBackend().execute(engine, plan)
+
+        eng = ServingEngine(4, pool_tokens=10**6,
+                            cfg=EngineConfig(pipeline_depth=3),
+                            backend=Legacy())
+        eng.register_chunk("c0", holder=1, length=256)
+        reqs = [Request(0, home=0, chunk_ids=["c0"], m_q=8)]
+        stats = eng.run(iter([reqs] * 3))
+        assert len(stats) == 3
+        # eager tickets hide nothing: the await never blocks
+        assert eng.planner_overlap_s == 0.0
+
+    def test_ticket_roundtrip_on_analytic(self):
+        eng = ServingEngine(4, pool_tokens=10**6)
+        eng.register_chunk("c0", holder=1, length=256)
+        plan = eng.plan_step([Request(0, home=0, chunk_ids=["c0"], m_q=8)])
+        ticket = submit_step(eng.backend, eng, plan)
+        assert isinstance(ticket, StepTicket)
+        assert ticket.execution is not None      # analytic is eager
+        execution = await_step(eng.backend, eng, ticket)
+        assert execution.timeline is not None
+
+    @pytest.mark.parametrize("depth", (2, 4))
+    def test_jax_exec_pipelined_matches_oracle(self, depth):
+        """In-process exec backend under pipelining: outputs per step
+        still reproduce single-instance attention."""
+        base = _run_at_depth(SCENARIOS["mixed_congested"], 1,
+                             backend=AnalyticBackend())
+        eng, steps = SCENARIOS["mixed_congested"](
+            JaxExecBackend(), cfg=EngineConfig(pipeline_depth=depth))
+        eng.run(iter(steps))
+        _assert_engines_identical(base, eng, depth)
+        for step, reqs in enumerate(steps, start=1):
+            outs = eng.outputs_of(step)
+            for rq in reqs:
+                want = oracle_partial(TINY_MLA, eng.store, rq, step)
+                np.testing.assert_allclose(outs[rq.req_id].o, want.o,
+                                           rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# Obs integration: pipeline series + overlapping lane spans.
+# ---------------------------------------------------------------------------
+
+class TestPipelineObs:
+    def test_pipeline_metrics_published(self):
+        from repro.obs import Obs, Tracer, validate_trace
+        obs = Obs(tracer=Tracer())
+        eng, steps = SCENARIOS["mixed_congested"](
+            cfg=EngineConfig(pipeline_depth=2))
+        eng.obs = obs
+        obs.bind_engine(eng)
+        eng.run(iter(steps))
+        snap = obs.metrics.snapshot()
+        assert snap["gauges"]["engine.pipeline_depth"] == 2
+        assert "engine.misspeculation_replans" in snap["gauges"]
+        assert "engine.planner_overlap_s" in snap["histograms"]
+        assert "engine.planner_overlap_s_total" in snap["counters"]
+        # lane-tracked wall spans still form a valid trace
+        validate_trace(obs.tracer.export())
+
+    def test_depth1_keeps_single_engine_track(self):
+        from repro.obs import Obs, Tracer
+        obs = Obs(tracer=Tracer())
+        eng, steps = SCENARIOS["mixed_congested"]()
+        eng.obs = obs
+        obs.bind_engine(eng)
+        eng.run(iter(steps))
+        names = {e["args"]["name"] for e in obs.tracer.events
+                 if e.get("ph") == "M" and e["pid"] == 0
+                 and e["name"] == "thread_name"}
+        assert names == {"engine"}
+
+    def test_depth2_spans_fan_out_over_lanes(self):
+        from repro.obs import Obs, Tracer
+        obs = Obs(tracer=Tracer())
+        eng, steps = SCENARIOS["mixed_congested"](
+            cfg=EngineConfig(pipeline_depth=2))
+        eng.obs = obs
+        obs.bind_engine(eng)
+        eng.run(iter(steps))
+        names = {e["args"]["name"] for e in obs.tracer.events
+                 if e.get("ph") == "M" and e["pid"] == 0
+                 and e["name"] == "thread_name"}
+        assert names == {"engine lane 0", "engine lane 1"}
